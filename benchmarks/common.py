@@ -1,0 +1,44 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import Model
+
+
+def bench_model(seed: int = 0, **overrides):
+    """A ~10M-param GPT-style model: large enough that truncation effects
+    are measurable, small enough for CPU sweeps."""
+    cfg = ArchConfig(name="bench", family="dense", n_layers=4, d_model=128,
+                     n_heads=8, n_kv_heads=4, d_ff=512, vocab=512,
+                     dtype="float32", remat=False, scan_layers=False,
+                     **overrides)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def bench_batch(cfg, B=8, S=64, seed=0):
+    r = np.random.RandomState(seed)
+    toks = r.randint(0, cfg.vocab, (B, S + 1))
+    return {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out
+
+
+def csv_row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

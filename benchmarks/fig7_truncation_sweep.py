@@ -1,0 +1,51 @@
+"""Paper Fig. 7: error vs mantissa width under three truncation strategies.
+
+LM mapping of the AMR experiment (DESIGN.md §3):
+  * panel M-0: global truncation (all scopes)
+  * panel M-1/M-2: layer-depth cutoffs — exclude the last l layers + the
+    logits head (the "finest blocks": closest to the loss)
+  * plus the operation-count bars (truncated vs full), from the same static
+    counters the §7.2 speedup model consumes.
+Output: CSV  strategy,mantissa,logit_l1,truncated_frac
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import truncate, profile_counts, TruncationPolicy
+from benchmarks.common import bench_model, bench_batch, csv_row
+
+
+def strategies(cfg):
+    n = cfg.n_layers
+    yield "M-0_global", TruncationPolicy.everywhere("e8m2")
+    yield "M-1_skip_last", TruncationPolicy.everywhere("e8m2").excluding(
+        f"layer{n-1}", "final_norm", "logits", "loss")
+    yield "M-2_skip_last2", TruncationPolicy.everywhere("e8m2").excluding(
+        f"layer{n-1}", f"layer{n-2}", "final_norm", "logits", "loss")
+
+
+def run():
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    full = model.forward(params, batch)
+    import dataclasses
+    print("strategy,mantissa,logit_l1,truncated_frac")
+    for name, base_pol in strategies(cfg):
+        for m in (2, 3, 4, 6, 8, 10, 14, 18, 23):
+            rules = tuple(dataclasses.replace(r, fmt=r.fmt.with_mantissa(m))
+                          for r in base_pol.rules)
+            pol = dataclasses.replace(base_pol, rules=rules)
+            tr = truncate(model.forward, pol, impl="ref")(params, batch)
+            err = float(jnp.mean(jnp.abs(full - tr)))
+            frac = profile_counts(model.forward, pol)(
+                params, batch).truncated_fraction
+            print(f"{name},{m},{err:.6e},{frac:.4f}", flush=True)
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table 4 + Fig. 8: hardware co-design speedup predictions.
+
+Feeds the static truncated/full op counters of each truncation strategy
+into (a) the paper's FPNew CPU area-density model and (b) the TPU v5e
+re-parameterization, for compute-bound and memory-bound regimes.
+Output: CSV  strategy,trunc_frac,cpu_fp16_x,cpu_fp32_x,tpu_compute_x,tpu_memory_x,bound
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import profile_counts, TruncationPolicy
+from repro.core.speedup import estimate_speedup, fpu_area_model
+from benchmarks.common import bench_model, bench_batch
+from benchmarks.fig7_truncation_sweep import strategies
+
+
+def run():
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    print("strategy,trunc_frac,cpu_fp16_x,cpu_fp32_x,tpu_compute_x,"
+          "tpu_memory_x,bound")
+    for name, base_pol in strategies(cfg):
+        for m, key in ((10, "fp16"), (2, "e5m2")):
+            rules = tuple(dataclasses.replace(r, fmt=r.fmt.with_mantissa(m))
+                          for r in base_pol.rules)
+            pol = dataclasses.replace(base_pol, rules=rules)
+            rep = profile_counts(model.loss, pol)(params, batch)
+            cpu = fpu_area_model(rep.flops_by_fmt)
+            est = estimate_speedup(rep)
+            print(f"{name}_m{m},{rep.truncated_fraction:.3f},"
+                  f"{cpu.get('fp16', 1.0):.2f},{cpu.get('fp32', 1.0):.2f},"
+                  f"{est.compute_bound:.2f},{est.memory_bound:.2f},"
+                  f"{est.bound}", flush=True)
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

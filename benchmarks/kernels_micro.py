@@ -1,0 +1,56 @@
+"""Microbenchmarks for the three Pallas kernels (jnp/XLA path on CPU; the
+kernels themselves are validated in interpret mode by tests). Reports
+us/call + achieved GB/s or GFLOP/s of the XLA reference path so §Perf has a
+host-side sanity line per kernel contract."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize_em.ops import quantize
+from repro.core.formats import FPFormat
+from repro.models.attention import flash_attention
+from repro.kernels.rwkv6.ref import wkv6_ref
+from benchmarks.common import timeit, csv_row
+
+
+def run():
+    print("name,us_per_call,derived")
+    r = np.random.RandomState(0)
+
+    # quantizer: elementwise bit math
+    x = jnp.asarray(r.randn(4 * 1024 * 1024), jnp.float32)
+    fn = jax.jit(lambda v: quantize(v, FPFormat(5, 7), impl="ref"))
+    t, _ = timeit(fn, x)
+    gbs = x.size * 8 / t / 1e9
+    csv_row("quantize_e5m7_4M", t * 1e6, f"{gbs:.1f}GB/s")
+
+    # flash attention (chunked XLA path)
+    q = jnp.asarray(r.randn(1, 8, 1024, 64), jnp.float32)
+    k = jnp.asarray(r.randn(1, 4, 1024, 64), jnp.float32)
+    v = jnp.asarray(r.randn(1, 4, 1024, 64), jnp.float32)
+    fa = jax.jit(lambda a, b, c: flash_attention(a, b, c, causal=True))
+    t, _ = timeit(fa, q, k, v)
+    flops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2  # causal ~ half
+    csv_row("flash_attn_B1H8S1024D64", t * 1e6, f"{flops / t / 1e9:.1f}GFLOP/s")
+
+    # wkv6 recurrence
+    B, H, S, hd = 1, 8, 512, 64
+    args = [jnp.asarray(r.randn(B, H, S, hd), jnp.float32) for _ in range(3)]
+    w = jnp.asarray(1 / (1 + np.exp(-r.randn(B, H, S, hd))), jnp.float32)
+    u = jnp.asarray(r.randn(H, hd) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    wk = jax.jit(lambda a, b, c, d: wkv6_ref(a, b, c, d, u, s0)[0])
+    t, _ = timeit(wk, args[0], args[1], args[2], w)
+    flops = B * H * S * hd * hd * 4
+    csv_row("wkv6_B1H8S512hd64", t * 1e6, f"{flops / t / 1e9:.1f}GFLOP/s")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

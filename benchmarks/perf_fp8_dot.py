@@ -1,0 +1,87 @@
+"""Beyond-paper perf experiment: fp8 (e4m3) matmul-input quantization.
+
+The paper's co-design model asks "what if these ops ran on a cheaper FPU" —
+on TPU the cheaper unit exists (fp8 MXU at 2x bf16 peak). We (a) apply the
+op-mode rule `quantize_dot_inputs` to every layer matmul of the
+deepseek-coder-33b train step, splitting its FLOPs by precision with the
+static counters, (b) recompute the roofline compute term with per-precision
+peaks, and (c) measure the numerical cost on the smoke config. This is the
+paper's technique driving OUR roofline — profile first, then claim the
+hardware win (EXPERIMENTS.md §Perf pair 3).
+
+Output: CSV  metric,value
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, SHAPES
+from repro.core import (
+    truncate, profile_counts, TruncationPolicy, TruncationRule, E4M3,
+)
+from repro.core.speedup import tpu_relative_throughput, PEAK_BF16_FLOPS
+from repro.core.formats import parse_format
+from repro.models import Model
+
+CHIPS = 256
+
+
+def fp8_policy():
+    rule = TruncationRule(fmt=E4M3, scope="*layer*",
+                          ops=("dot_general",), quantize_dot_inputs=True)
+    return TruncationPolicy(rules=(rule,))
+
+
+def run():
+    print("metric,value")
+    # ---- (a)+(b): FLOP split and compute term on the FULL 33B train step
+    cfg = get_config("deepseek-coder-33b")
+    model = Model(cfg)
+    shape = SHAPES["train_4k"]
+    from repro.launch import specs as sp
+    from repro.train.trainer import TrainConfig, make_train_step
+    step_fn = make_train_step(model, TrainConfig(grad_accum=cfg.grad_accum))
+    params = sp.params_specs(model, None)
+    opt = sp.opt_state_specs(model, None)
+    batch = sp.input_specs(cfg, shape, None)
+    rep = profile_counts(
+        lambda p, o, b: step_fn(p, o, b, jnp.int32(0)),
+        fp8_policy())(params, opt, batch)
+
+    t_base = rep.total_flops / (CHIPS * PEAK_BF16_FLOPS)
+    t_mix = sum(
+        fl / (CHIPS * PEAK_BF16_FLOPS *
+              tpu_relative_throughput(parse_format(k) if k != "full"
+                                      else parse_format("bf16")))
+        for k, fl in rep.flops_by_fmt.items())
+    print(f"fp8_flop_fraction,{rep.truncated_fraction:.4f}")
+    print(f"T_compute_bf16_s,{t_base:.3f}")
+    print(f"T_compute_fp8mix_s,{t_mix:.3f}")
+    print(f"compute_term_speedup,{t_base / t_mix:.3f}")
+
+    # ---- (c): numerical cost, smoke config logit L1 + short training
+    scfg = get_config("deepseek-coder-33b", "smoke")
+    smodel = Model(scfg)
+    sp_params = smodel.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    toks = r.randint(0, scfg.vocab, (4, 65))
+    sbatch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+              "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+    full = smodel.forward(sp_params, sbatch)
+    lossy = truncate(smodel.forward, fp8_policy(), impl="ref")(
+        sp_params, sbatch)
+    l1 = float(jnp.mean(jnp.abs(full - lossy)))
+    rel = l1 / float(jnp.mean(jnp.abs(full)))
+    print(f"logit_l1,{l1:.6e}")
+    print(f"logit_rel_err,{rel:.6e}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Roofline-term table from the dry-run artifacts (deliverable g as a
+benchmark: one row per (arch x shape) cell, single-pod mesh). Requires a
+prior `python -m repro.launch.dryrun --all`; prints a placeholder note when
+artifacts are absent (e.g. fresh clone)."""
+from __future__ import annotations
+
+import os
+
+from repro.launch import roofline
+
+
+def run():
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+    recs = [r for r in roofline.load(d) if r.get("ok")]
+    if not recs:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    rows = [roofline.analyze(r) for r in recs]
+    print(roofline.table(rows))
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"# dominant-term census: {doms}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

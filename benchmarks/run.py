@@ -1,0 +1,34 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV blocks (plus per-benchmark headers). ``python -m benchmarks.run``.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig7_truncation_sweep, table2_memmode, table3_overhead,
+        fig8_speedup_model, kernels_micro, perf_fp8_dot, roofline_table,
+    )
+    benches = [
+        ("fig7_truncation_sweep", fig7_truncation_sweep.run),
+        ("table2_memmode", table2_memmode.run),
+        ("table3_overhead", table3_overhead.run),
+        ("fig8_speedup_model", fig8_speedup_model.run),
+        ("kernels_micro", kernels_micro.run),
+        ("perf_fp8_dot", perf_fp8_dot.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in benches:
+        if only and only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,61 @@
+"""Automated precision search: the paper's manual hypothesis loop, closed.
+
+Greedy per-scope mantissa descent: starting from fp32 everywhere, walk the
+module scopes; for each, lower the mantissa while the validation-loss
+degradation stays inside the error budget, then keep the lowest admissible
+width. Produces a mixed-precision policy + its predicted speedup — i.e. the
+Fig. 7 "cost-benefit analysis" done automatically.
+
+    PYTHONPATH=src python examples/precision_search.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import (
+    truncate, profile_counts, TruncationPolicy, TruncationRule, FPFormat,
+    estimate_speedup,
+)
+from repro.models import Model
+
+ERROR_BUDGET = 5e-3       # max acceptable relative loss degradation
+SCOPES = ["**/attn", "**/mlp", "**/pre_norm", "**/post_norm",
+          "final_norm", "logits"]
+WIDTHS = [23, 16, 10, 7, 5, 3, 2]
+
+cfg = get_config("h2o-danube-1.8b", "smoke")
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+r = np.random.RandomState(0)
+toks = r.randint(0, cfg.vocab, (8, 65))
+batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+         "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+full = float(model.loss(params, batch))
+print(f"baseline loss {full:.6f}; budget {ERROR_BUDGET:.0e} relative\n")
+
+chosen = {}
+for sc in SCOPES:
+    best = 23
+    for m in WIDTHS:
+        rules = tuple(TruncationRule(fmt=FPFormat(8, mm), scope=s)
+                      for s, mm in {**chosen, sc: m}.items())
+        pol = TruncationPolicy(rules=rules)
+        lossy = float(truncate(model.loss, pol)(params, batch))
+        rel = abs(lossy - full) / max(abs(full), 1e-9)
+        if rel <= ERROR_BUDGET:
+            best = m
+        else:
+            break
+    chosen[sc] = best
+    print(f"  {sc:15s} -> e8m{best}")
+
+rules = tuple(TruncationRule(fmt=FPFormat(8, m), scope=s)
+              for s, m in chosen.items())
+policy = TruncationPolicy(rules=rules)
+lossy = float(truncate(model.loss, policy)(params, batch))
+rep = profile_counts(model.loss, policy)(params, batch)
+print(f"\nfinal policy loss {lossy:.6f} (rel err "
+      f"{abs(lossy-full)/abs(full):.2e})")
+print(rep.summary())
+print("predicted speedup:", estimate_speedup(rep))

@@ -1,0 +1,41 @@
+"""Quickstart: profile a model's numerical sensitivity in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import (
+    truncate, memtrace, profile_counts, TruncationPolicy, estimate_speedup,
+)
+from repro.models import Model
+
+# 1. any assigned architecture, reduced config for the laptop
+cfg = get_config("olmoe-1b-7b", "smoke")
+model = Model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+r = np.random.RandomState(0)
+toks = r.randint(0, cfg.vocab, (4, 65))
+batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+         "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+# 2. hypothesis: the MoE experts tolerate 8 mantissa bits (the router won't)
+policy = TruncationPolicy.scoped("**/moe/experts", "e8m8")
+
+# 3. op-mode: run the truncated model, measure the damage
+full = float(model.loss(params, batch))
+lossy = float(truncate(model.loss, policy)(params, batch))
+print(f"loss full={full:.6f}  truncated={lossy:.6f}  delta={lossy-full:+.2e}")
+
+# 4. counters -> predicted speedup (paper §7.2)
+rep = profile_counts(model.loss, policy)(params, batch)
+print(rep.summary())
+print("predicted:", estimate_speedup(rep))
+
+# 5. mem-mode: where does it hurt? (numerical heatmap)
+out, heat = memtrace(model.loss, TruncationPolicy.everywhere("e8m8"),
+                     threshold=1e-3)(params, batch)
+print("\ntop numerically-fragile locations:")
+print(heat.summary(8))

@@ -1,0 +1,21 @@
+# The paper's primary contribution: transparent, scoped, arbitrary-precision
+# numerical profiling of JAX computations (RAPTOR, SC'25), adapted to TPU.
+from repro.core.formats import (
+    FPFormat, parse_format, FP64, FP32, TF32, BF16, FP16, E5M2, E4M3, E4M3FN,
+)
+from repro.core.policy import (
+    TruncationPolicy, TruncationRule, magnitude_below, magnitude_above,
+)
+from repro.core.api import truncate, memtrace, profile_counts, scope
+from repro.core.counters import CountReport
+from repro.core.memmode import RaptorReport
+from repro.core.speedup import estimate_speedup, fpu_area_model, SpeedupEstimate
+
+__all__ = [
+    "FPFormat", "parse_format", "FP64", "FP32", "TF32", "BF16", "FP16",
+    "E5M2", "E4M3", "E4M3FN",
+    "TruncationPolicy", "TruncationRule", "magnitude_below", "magnitude_above",
+    "truncate", "memtrace", "profile_counts", "scope",
+    "CountReport", "RaptorReport",
+    "estimate_speedup", "fpu_area_model", "SpeedupEstimate",
+]

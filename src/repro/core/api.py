@@ -1,0 +1,75 @@
+"""Public RAPTOR-JAX API.
+
+    from repro.core import api as raptor
+
+    policy = raptor.TruncationPolicy.scoped("model/*/mlp", "e5m7")
+    lossy_step = raptor.truncate(train_step, policy)       # op-mode
+    out, report = raptor.memtrace(step, policy, 1e-3)(...) # mem-mode
+    counts = raptor.profile_counts(step, policy)(...)      # speedup inputs
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+
+from repro.core import interpreter, memmode, counters
+from repro.core.formats import FPFormat, parse_format  # re-export
+from repro.core.policy import (  # re-export
+    TruncationPolicy, TruncationRule, magnitude_below, magnitude_above,
+)
+
+scope = jax.named_scope  # region marker, the _raptor_trunc_func_* analogue
+
+
+def _flatten_like_make_jaxpr(args, kwargs):
+    return jax.tree_util.tree_leaves((args, kwargs))
+
+
+def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto"
+             ) -> Callable:
+    """Return ``fn`` with op-mode truncation applied under ``policy``.
+
+    The wrapper is an ordinary traceable JAX function: compose freely with
+    ``jax.jit``, ``jax.grad`` (grad-then-truncate covers the backward pass),
+    ``shard_map``/``pjit`` meshes, etc.
+    """
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
+        flat = _flatten_like_make_jaxpr(args, kwargs)
+        outs = interpreter.eval_quantized(
+            closed.jaxpr, closed.consts, flat, policy, impl)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    return wrapped
+
+
+def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
+             *, impl: str = "auto") -> Callable:
+    """mem-mode: returns ``(outputs, RaptorReport)`` where the report carries
+    per-source-location flag counts and max relative deviations of the
+    truncated values against full-precision shadow values."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
+        flat = _flatten_like_make_jaxpr(args, kwargs)
+        outs, report = memmode.eval_shadowed(
+            closed.jaxpr, closed.consts, flat, policy, threshold, impl)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        return jax.tree_util.tree_unflatten(out_tree, outs), report
+
+    return wrapped
+
+
+def profile_counts(fn: Callable, policy: TruncationPolicy) -> Callable:
+    """Static operation/byte counting (the paper's runtime counters, derived
+    from the jaxpr instead): returns a CountReport of truncated vs
+    full-precision FLOPs and bytes per scope."""
+    def wrapped(*args, **kwargs):
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        return counters.count_jaxpr(closed.jaxpr, policy)
+
+    return wrapped

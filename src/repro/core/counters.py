@@ -1,0 +1,187 @@
+"""Static FLOP/byte counters per scope, split truncated vs full precision.
+
+RAPTOR's runtime counts executed FP ops and touched bytes in truncated and
+non-truncated regions (the bars in Fig. 7, inputs to the §7.2 co-design
+model). In XLA-land the jaxpr is a faithful static description of the work —
+scan trip counts are static — so we count by walking the jaxpr instead of
+paying runtime instrumentation.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+from jax._src import core as jcore
+
+from repro.core.policy import TruncationPolicy, STRUCTURAL_PRIMS, join_stack
+
+# primitives that perform `weight` FLOPs per output element
+_ELEMENTWISE_WEIGHT = {
+    "exp": 4.0, "log": 4.0, "sin": 4.0, "cos": 4.0, "tanh": 4.0,
+    "logistic": 4.0, "erf": 4.0, "rsqrt": 2.0, "sqrt": 2.0, "div": 1.0,
+    "pow": 4.0, "cbrt": 4.0, "exp2": 4.0, "log1p": 4.0, "expm1": 4.0,
+    "atan2": 4.0, "erf_inv": 4.0,
+}
+
+
+def _size(aval) -> int:
+    return int(math.prod(aval.shape)) if hasattr(aval, "shape") else 0
+
+
+def _bytes(aval) -> int:
+    if not hasattr(aval, "dtype"):
+        return 0
+    return _size(aval) * jnp.dtype(aval.dtype).itemsize
+
+
+def _eqn_flops(eqn) -> float:
+    prim = eqn.primitive.name
+    if prim in STRUCTURAL_PRIMS:
+        return 0.0
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _), (lb, _) = dims
+        lhs = eqn.invars[0].aval
+        out = eqn.outvars[0].aval
+        k = math.prod(lhs.shape[d] for d in lc)
+        return 2.0 * _size(out) * k
+    if prim == "conv_general_dilated":
+        out = eqn.outvars[0].aval
+        rhs = eqn.invars[1].aval
+        return 2.0 * _size(out) * math.prod(rhs.shape[1:])
+    if prim in ("reduce_sum", "reduce_prod", "cumsum", "cumprod", "cumlogsumexp"):
+        return float(_size(eqn.invars[0].aval))
+    if prim in ("add", "sub", "mul", "max", "min", "integer_pow", "neg",
+                "select_n", "convert_element_type"):
+        return float(sum(_size(v.aval) for v in eqn.outvars))
+    w = _ELEMENTWISE_WEIGHT.get(prim)
+    if w is not None:
+        return w * sum(_size(v.aval) for v in eqn.outvars)
+    # default: one flop per output element for any other math primitive
+    return float(sum(_size(v.aval) for v in eqn.outvars))
+
+
+@dataclasses.dataclass
+class CountReport:
+    """Per-format FLOP and byte totals + per-scope breakdown."""
+
+    flops_by_fmt: Dict[str, float]
+    bytes_by_fmt: Dict[str, float]
+    by_scope: Dict[Tuple[str, str], float]  # (scope, fmt) -> flops
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.flops_by_fmt.values())
+
+    @property
+    def truncated_fraction(self) -> float:
+        t = self.total_flops
+        full = self.flops_by_fmt.get("full", 0.0)
+        return 0.0 if t == 0 else (t - full) / t
+
+    def merged(self, other: "CountReport") -> "CountReport":
+        r = CountReport(dict(self.flops_by_fmt), dict(self.bytes_by_fmt),
+                        dict(self.by_scope))
+        for k, v in other.flops_by_fmt.items():
+            r.flops_by_fmt[k] = r.flops_by_fmt.get(k, 0.0) + v
+        for k, v in other.bytes_by_fmt.items():
+            r.bytes_by_fmt[k] = r.bytes_by_fmt.get(k, 0.0) + v
+        for k, v in other.by_scope.items():
+            r.by_scope[k] = r.by_scope.get(k, 0.0) + v
+        return r
+
+    def summary(self) -> str:
+        lines = [f"  {'format':>10} {'GFLOPs':>14} {'GBytes':>14}"]
+        for fmt in sorted(self.flops_by_fmt):
+            lines.append(
+                f"  {fmt:>10} {self.flops_by_fmt[fmt] / 1e9:>14.4f} "
+                f"{self.bytes_by_fmt.get(fmt, 0.0) / 1e9:>14.4f}")
+        lines.append(f"  truncated fraction of FLOPs: "
+                     f"{self.truncated_fraction * 100:.2f}%")
+        return "\n".join(lines)
+
+
+_HOPS_WITH_JAXPR = {"jit": "jaxpr", "pjit": "jaxpr", "closed_call": "call_jaxpr",
+                    "remat2": "jaxpr", "checkpoint": "jaxpr"}
+
+
+_MEMORY_HEAVY = frozenset({
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "reduce_sum", "reduce_max", "reduce_min", "dynamic_slice",
+    "dynamic_update_slice", "concatenate", "sort",
+})
+
+
+def count_jaxpr(jaxpr: jcore.Jaxpr, policy: Optional[TruncationPolicy],
+                mult: float = 1.0, prefix: str = "", fused: bool = False
+                ) -> CountReport:
+    """``fused=True`` models post-fusion HBM traffic: elementwise chains are
+    assumed producer-consumer fused (outputs counted once, operands free);
+    matmuls/gathers/reductions pay for operands + results. ``fused=False``
+    is the raw per-op operand+result census (un-fused upper bound)."""
+    flops = collections.defaultdict(float)
+    nbytes = collections.defaultdict(float)
+    by_scope = collections.defaultdict(float)
+
+    def add(report: CountReport):
+        for k, v in report.flops_by_fmt.items():
+            flops[k] += v
+        for k, v in report.bytes_by_fmt.items():
+            nbytes[k] += v
+        for k, v in report.by_scope.items():
+            by_scope[k] += v
+
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        sub_prefix = join_stack(prefix, str(eqn.source_info.name_stack))
+        if prim in _HOPS_WITH_JAXPR:
+            inner = eqn.params[_HOPS_WITH_JAXPR[prim]]
+            inner = inner.jaxpr if isinstance(inner, jcore.ClosedJaxpr) else inner
+            add(count_jaxpr(inner, policy, mult, sub_prefix, fused))
+            continue
+        if prim == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            add(count_jaxpr(inner, policy, mult * eqn.params["length"],
+                            sub_prefix, fused))
+            continue
+        if prim == "while":
+            # trip count unknowable statically; count one iteration and flag
+            inner = eqn.params["body_jaxpr"].jaxpr
+            add(count_jaxpr(inner, policy, mult, sub_prefix, fused))
+            continue
+        if prim == "cond":
+            # count the largest branch (upper bound)
+            reports = [count_jaxpr(_b.jaxpr, policy, mult, sub_prefix, fused)
+                       for _b in eqn.params["branches"]]
+            if reports:
+                add(max(reports, key=lambda r: r.total_flops))
+            continue
+        if prim in ("custom_jvp_call", "custom_vjp_call"):
+            add(count_jaxpr(eqn.params["call_jaxpr"].jaxpr, policy, mult,
+                            sub_prefix, fused))
+            continue
+
+        f = _eqn_flops(eqn) * mult
+        if f == 0.0:
+            continue
+        if fused and prim not in _MEMORY_HEAVY:
+            b = sum(_bytes(v.aval) for v in eqn.outvars) * mult
+        else:
+            b = (sum(_bytes(v.aval) for v in eqn.invars
+                     if not isinstance(v, jcore.Literal))
+                 + sum(_bytes(v.aval) for v in eqn.outvars)) * mult
+        name_stack = sub_prefix
+        out_dtype = (eqn.outvars[0].aval.dtype
+                     if eqn.outvars and hasattr(eqn.outvars[0].aval, "dtype")
+                     else jnp.float32)
+        rule = policy.rule_for(name_stack, prim, out_dtype) if policy else None
+        key = rule.fmt.key if rule is not None else "full"
+        flops[key] += f
+        nbytes[key] += b
+        scope_key = name_stack.split("/")[0] if name_stack else "<root>"
+        by_scope[(scope_key, key)] += f
+
+    return CountReport(dict(flops), dict(nbytes), dict(by_scope))

@@ -1,0 +1,208 @@
+"""Op-mode jaxpr interpreter — the JAX analogue of RAPTOR's LLVM pass.
+
+``eval_quantized`` walks a jaxpr and re-binds every equation, rounding the
+result of each matched floating-point primitive onto the policy's (e,m) grid
+(compute-in-carrier + correctly-round-result = MPFR op-mode semantics, see
+DESIGN.md §2). Because the walk happens *inside* a trace, the transformed
+function can be jit'ed, differentiated, pjit-sharded, and scanned like any
+other JAX function — the profiling instrument rides the normal compilation
+pipeline just as RAPTOR rides LTO.
+
+Higher-order primitives are handled recursively: ``jit``/``closed_call`` are
+inlined; ``scan``/``while``/``cond`` are rebuilt through their high-level
+APIs with transformed bodies; ``remat2`` is re-wrapped in ``jax.checkpoint``
+(preserving memory behaviour); ``custom_jvp/vjp_call`` evaluate their primal
+jaxpr (grad-then-truncate sees plain primitives anyway).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax._src import core as jcore
+
+from repro.core.policy import TruncationPolicy, TruncationRule, join_stack
+
+
+def _safe_map(f, *xs):
+    ls = [list(x) for x in xs]
+    assert len({len(l) for l in ls}) == 1, 'length mismatch'
+    return list(map(f, *ls))
+from repro.kernels.quantize_em.ops import quantize
+
+# primitives whose *inputs* we optionally quantize to emulate a low-precision
+# matrix unit with full-precision accumulation (TPU-realistic scenario)
+_DOT_PRIMS = frozenset({"dot_general", "conv_general_dilated", "ragged_dot"})
+
+
+def _maybe_quantize(val, rule: TruncationRule, impl: str):
+    if not isinstance(val, jax.Array) and not hasattr(val, "dtype"):
+        return val
+    if not jnp.issubdtype(val.dtype, jnp.floating):
+        return val
+    q = quantize(val, rule.fmt, impl=impl)
+    if rule.mask is not None:
+        q = jnp.where(rule.mask(val), q, val)
+    return q
+
+
+def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
+                   policy: TruncationPolicy, impl: str = "auto",
+                   prefix: str = "") -> List[Any]:
+    """Evaluate ``jaxpr`` with op-mode truncation under ``policy``."""
+    env = {}
+
+    def read(v):
+        return v.val if isinstance(v, jcore.Literal) else env[v]
+
+    def write(v, val):
+        env[v] = val
+
+    _safe_map(write, jaxpr.constvars, consts)
+    _safe_map(write, jaxpr.invars, args)
+
+    for eqn in jaxpr.eqns:
+        invals = [read(v) for v in eqn.invars]
+        prim = eqn.primitive
+        name_stack = join_stack(prefix, str(eqn.source_info.name_stack))
+        handler = _HOP_HANDLERS.get(prim.name)
+        if handler is not None:
+            outvals = handler(eqn, invals, policy, impl, name_stack)
+        else:
+            # input-side quantization for matrix units
+            rule0 = None
+            if prim.name in _DOT_PRIMS and eqn.outvars:
+                rule0 = policy.rule_for(name_stack, prim.name,
+                                        eqn.outvars[0].aval.dtype)
+                if rule0 is not None and rule0.quantize_dot_inputs:
+                    invals = [_maybe_quantize(v, rule0, impl) for v in invals]
+            outvals = prim.bind(*invals, **eqn.params)
+            if not prim.multiple_results:
+                outvals = [outvals]
+            outvals = list(outvals)
+            for i, (ov, var) in enumerate(zip(outvals, eqn.outvars)):
+                aval = var.aval
+                if not hasattr(aval, "dtype"):
+                    continue
+                rule = rule0 if rule0 is not None else policy.rule_for(
+                    name_stack, prim.name, aval.dtype)
+                if rule is not None and jnp.issubdtype(aval.dtype, jnp.floating):
+                    if not (rule.quantize_dot_inputs and prim.name in _DOT_PRIMS):
+                        outvals[i] = _maybe_quantize(ov, rule, impl)
+        if not isinstance(outvals, (list, tuple)):
+            outvals = [outvals]
+        _safe_map(write, eqn.outvars, outvals)
+
+    return [read(v) for v in jaxpr.outvars]
+
+
+# --------------------------------------------------------------------------
+# higher-order primitive handlers
+# --------------------------------------------------------------------------
+
+def _closed(eqn_param) -> jcore.ClosedJaxpr:
+    if isinstance(eqn_param, jcore.ClosedJaxpr):
+        return eqn_param
+    return jcore.ClosedJaxpr(eqn_param, ())
+
+
+def _handle_call(eqn, invals, policy, impl, prefix):
+    key = "call_jaxpr" if "call_jaxpr" in eqn.params else "jaxpr"
+    closed = _closed(eqn.params[key])
+    return eval_quantized(closed.jaxpr, closed.consts, invals, policy, impl,
+                          prefix)
+
+
+def _handle_scan(eqn, invals, policy, impl, prefix):
+    p = eqn.params
+    closed = _closed(p["jaxpr"])
+    nc, ncarry = p["num_consts"], p["num_carry"]
+    body_consts = invals[:nc]
+    carry_in = tuple(invals[nc:nc + ncarry])
+    xs = tuple(invals[nc + ncarry:])
+
+    def body_fn(carry, x):
+        res = eval_quantized(closed.jaxpr, closed.consts,
+                             list(body_consts) + list(carry) + list(x),
+                             policy, impl, prefix)
+        return tuple(res[:ncarry]), tuple(res[ncarry:])
+
+    carry_out, ys = lax.scan(body_fn, carry_in, xs, length=p["length"],
+                             reverse=p["reverse"], unroll=p["unroll"])
+    return list(carry_out) + list(ys)
+
+
+def _handle_while(eqn, invals, policy, impl, prefix):
+    p = eqn.params
+    cond_closed = _closed(p["cond_jaxpr"])
+    body_closed = _closed(p["body_jaxpr"])
+    cn, bn = p["cond_nconsts"], p["body_nconsts"]
+    cond_consts = invals[:cn]
+    body_consts = invals[cn:cn + bn]
+    carry_in = tuple(invals[cn + bn:])
+
+    def cond_fn(carry):
+        res = eval_quantized(cond_closed.jaxpr, cond_closed.consts,
+                             list(cond_consts) + list(carry), policy, impl,
+                             prefix)
+        return res[0]
+
+    def body_fn(carry):
+        res = eval_quantized(body_closed.jaxpr, body_closed.consts,
+                             list(body_consts) + list(carry), policy, impl,
+                             prefix)
+        return tuple(res)
+
+    out = lax.while_loop(cond_fn, body_fn, carry_in)
+    return list(out)
+
+
+def _handle_cond(eqn, invals, policy, impl, prefix):
+    branches = eqn.params["branches"]
+    index, *operands = invals
+
+    def make_branch(br):
+        closed = _closed(br)
+        return lambda *ops: tuple(
+            eval_quantized(closed.jaxpr, closed.consts, list(ops), policy,
+                           impl, prefix))
+
+    out = lax.switch(index, [make_branch(b) for b in branches], *operands)
+    return list(out)
+
+
+def _handle_remat(eqn, invals, policy, impl, prefix):
+    closed = _closed(eqn.params["jaxpr"])
+
+    @functools.partial(jax.checkpoint, policy=eqn.params.get("policy"),
+                       prevent_cse=eqn.params.get("prevent_cse", True))
+    def inner(*args):
+        return tuple(eval_quantized(closed.jaxpr, closed.consts, list(args),
+                                    policy, impl, prefix))
+
+    return list(inner(*invals))
+
+
+def _handle_custom_call(eqn, invals, policy, impl, prefix):
+    closed = _closed(eqn.params["call_jaxpr"])
+    return eval_quantized(closed.jaxpr, closed.consts, invals, policy, impl,
+                          prefix)
+
+
+_HOP_HANDLERS = {
+    "jit": _handle_call,
+    "pjit": _handle_call,
+    "closed_call": _handle_call,
+    "core_call": _handle_call,
+    "scan": _handle_scan,
+    "while": _handle_while,
+    "cond": _handle_cond,
+    "remat2": _handle_remat,
+    "checkpoint": _handle_remat,
+    "custom_jvp_call": _handle_custom_call,
+    "custom_vjp_call": _handle_custom_call,
+    "custom_vjp_call_jaxpr": _handle_custom_call,
+}

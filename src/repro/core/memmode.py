@@ -1,0 +1,251 @@
+"""Mem-mode: shadow-value tracking — the numerical debugger (paper §3.5/§6.3).
+
+Every value flows through the computation as a pair ``(truncated, shadow)``.
+The shadow lane replays the identical op sequence at full carrier precision —
+"as if the entire application had been run in full precision up to that
+point". After each truncated op we measure the elementwise relative deviation
+|low - shadow| / (|shadow| + eps); elements above the user threshold are
+*flagged* and accumulated per source location. The result is the paper's
+heatmap of code locations that do not react well to truncation.
+
+Unlike RAPTOR's pointer-swizzling shadow structs (shared-memory only, crashes
+on MPI reductions), the report is a pure pytree of counters that rides the
+normal SPMD data path — mem-mode here works under jit, scan, cond, while and
+across meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax._src import core as jcore
+
+from repro.core.policy import TruncationPolicy, join_stack
+from repro.kernels.quantize_em.ops import quantize
+
+_EPS = 1e-30
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RaptorReport:
+    """Per-location numerical deviation statistics (a pytree of arrays)."""
+
+    locations: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True))       # static: loc id -> description
+    flags: Any = None                     # i64[n_loc] elements over threshold
+    max_rel: Any = None                   # f32[n_loc] max relative deviation
+    op_counts: Any = None                 # i64[n_loc] truncated elements seen
+
+    def top(self, k: int = 10) -> List[Tuple[str, int, float]]:
+        flags = jax.device_get(self.flags)
+        max_rel = jax.device_get(self.max_rel)
+        order = sorted(range(len(self.locations)), key=lambda i: -int(flags[i]))
+        return [(self.locations[i], int(flags[i]), float(max_rel[i]))
+                for i in order[:k]]
+
+    def summary(self, k: int = 10) -> str:
+        lines = [f"  {'flags':>12} {'max_rel_err':>12}  location"]
+        for loc, f, m in self.top(k):
+            lines.append(f"  {f:>12d} {m:>12.3e}  {loc}")
+        return "\n".join(lines)
+
+
+def _tree_flags():
+    return jax.tree_util.tree_structure((0, 0, 0))
+
+
+class _Recorder:
+    """Mutable-during-trace location table; emits functional accumulators."""
+
+    def __init__(self, threshold: float):
+        self.threshold = threshold
+        self.locations: List[str] = []
+        self.loc_index: Dict[str, int] = {}
+
+    def loc_id(self, desc: str) -> int:
+        if desc not in self.loc_index:
+            self.loc_index[desc] = len(self.locations)
+            self.locations.append(desc)
+        return self.loc_index[desc]
+
+
+def _zero_stats(n: int):
+    return (jnp.zeros((n,), jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((n,), jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+
+
+def _accumulate(stats, idx: int, low, shadow, threshold: float):
+    flags, max_rel, op_counts = stats
+    lowf = low.astype(jnp.float32)
+    shf = shadow.astype(jnp.float32)
+    rel = jnp.abs(lowf - shf) / (jnp.abs(shf) + _EPS)
+    n_flag = jnp.sum(rel > threshold).astype(flags.dtype)
+    m = jnp.max(rel) if rel.size else jnp.float32(0)
+    flags = flags.at[idx].add(n_flag)
+    max_rel = max_rel.at[idx].max(m.astype(jnp.float32))
+    op_counts = op_counts.at[idx].add(jnp.asarray(low.size, op_counts.dtype))
+    return (flags, max_rel, op_counts)
+
+
+def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
+                  policy: TruncationPolicy, threshold: float, impl: str = "auto",
+                  ) -> Tuple[List[Any], RaptorReport]:
+    """Two-pass evaluation: first a dry trace to build the static location
+    table (so the stats arrays have a fixed shape), then the paired eval."""
+    rec = _Recorder(threshold)
+    _collect_locations(jaxpr, policy, rec, "")
+    n = max(len(rec.locations), 1)
+    if not rec.locations:
+        rec.loc_id("<no truncated locations>")
+
+    stats = _zero_stats(n)
+    outs, _, stats = _eval(jaxpr, consts, args, args, policy, threshold, impl,
+                           rec, stats)
+    report = RaptorReport(tuple(rec.locations), stats[0], stats[1], stats[2])
+    return outs, report
+
+
+def _loc_desc(eqn, prefix: str) -> str:
+    ns = str(eqn.source_info.name_stack)
+    frame = jax._src.source_info_util.user_frame(eqn.source_info.traceback)
+    src = f"{frame.file_name.split('/')[-1]}:{frame.start_line}" if frame else "?"
+    scope = f"{prefix}/{ns}" if prefix and ns else (prefix or ns or "<root>")
+    return f"{scope} {eqn.primitive.name} @ {src}"
+
+
+_SUB_JAXPRS = {
+    "jit": ("jaxpr",), "pjit": ("jaxpr",), "closed_call": ("call_jaxpr",),
+    "remat2": ("jaxpr",), "checkpoint": ("jaxpr",),
+    "scan": ("jaxpr",), "while": ("cond_jaxpr", "body_jaxpr"),
+    "custom_jvp_call": ("call_jaxpr",), "custom_vjp_call": ("call_jaxpr",),
+}
+
+
+def _collect_locations(jaxpr: jcore.Jaxpr, policy, rec: _Recorder, prefix: str):
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        sub_prefix = join_stack(prefix, str(eqn.source_info.name_stack))
+        if prim in _SUB_JAXPRS:
+            for key in _SUB_JAXPRS[prim]:
+                inner = eqn.params[key]
+                inner = inner.jaxpr if isinstance(inner, jcore.ClosedJaxpr) else inner
+                _collect_locations(inner, policy, rec, sub_prefix)
+            continue
+        if prim == "cond":
+            for br in eqn.params["branches"]:
+                _collect_locations(br.jaxpr, policy, rec, sub_prefix)
+            continue
+        for var in eqn.outvars:
+            aval = var.aval
+            if not hasattr(aval, "dtype"):
+                continue
+            rule = policy.rule_for(sub_prefix, prim, aval.dtype)
+            if rule is not None and jnp.issubdtype(aval.dtype, jnp.floating):
+                rec.loc_id(_loc_desc(eqn, prefix))
+                break
+
+
+def _eval(jaxpr, consts, low_args, shadow_args, policy, threshold, impl,
+          rec: _Recorder, stats, prefix: str = ""):
+    low_env, sh_env = {}, {}
+
+    def read(v):
+        if isinstance(v, jcore.Literal):
+            return v.val, v.val
+        return low_env[v], sh_env[v]
+
+    def write(v, lo, sh):
+        low_env[v] = lo
+        sh_env[v] = sh
+
+    for v, c in zip(jaxpr.constvars, consts):
+        write(v, c, c)
+    for v, lo, sh in zip(jaxpr.invars, low_args, shadow_args):
+        write(v, lo, sh)
+
+    for eqn in jaxpr.eqns:
+        pairs = [read(v) for v in eqn.invars]
+        lows = [p[0] for p in pairs]
+        shadows = [p[1] for p in pairs]
+        prim = eqn.primitive
+        ns = join_stack(prefix, str(eqn.source_info.name_stack))
+        handler = _MEM_HOPS.get(prim.name)
+        if handler is not None:
+            louts, shouts, stats = handler(eqn, lows, shadows, policy,
+                                           threshold, impl, rec, stats, ns)
+        else:
+            louts = prim.bind(*lows, **eqn.params)
+            shouts = prim.bind(*shadows, **eqn.params)
+            if not prim.multiple_results:
+                louts, shouts = [louts], [shouts]
+            louts, shouts = list(louts), list(shouts)
+            for i, var in enumerate(eqn.outvars):
+                aval = var.aval
+                if not hasattr(aval, "dtype"):
+                    continue
+                rule = policy.rule_for(ns, prim.name, aval.dtype)
+                if rule is not None and jnp.issubdtype(aval.dtype, jnp.floating):
+                    q = quantize(louts[i], rule.fmt, impl=impl)
+                    if rule.mask is not None:
+                        q = jnp.where(rule.mask(louts[i]), q, louts[i])
+                    louts[i] = q
+                    idx = rec.loc_id(_loc_desc(eqn, prefix))
+                    stats = _accumulate(stats, idx, q, shouts[i], threshold)
+        for var, lo, sh in zip(eqn.outvars, louts, shouts):
+            write(var, lo, sh)
+
+    lo_outs = [read(v)[0] for v in jaxpr.outvars]
+    sh_outs = [read(v)[1] for v in jaxpr.outvars]
+    return lo_outs, sh_outs, stats
+
+
+# ---- mem-mode HOP handlers (stats ride the carry) --------------------------
+
+def _mem_call(eqn, lows, shadows, policy, threshold, impl, rec, stats,
+              prefix=""):
+    closed = eqn.params.get("call_jaxpr", eqn.params.get("jaxpr"))
+    closed = closed if isinstance(closed, jcore.ClosedJaxpr) else jcore.ClosedJaxpr(closed, ())
+    outs, shouts, stats = _eval(closed.jaxpr, closed.consts, lows, shadows,
+                                policy, threshold, impl, rec, stats, prefix)
+    return outs, shouts, stats
+
+
+def _mem_scan(eqn, lows, shadows, policy, threshold, impl, rec, stats,
+              prefix=""):
+    p = eqn.params
+    closed = p["jaxpr"]
+    nc, ncarry = p["num_consts"], p["num_carry"]
+    lo_c, sh_c = lows[:nc], shadows[:nc]
+    lo_carry, sh_carry = tuple(lows[nc:nc + ncarry]), tuple(shadows[nc:nc + ncarry])
+    lo_xs, sh_xs = tuple(lows[nc + ncarry:]), tuple(shadows[nc + ncarry:])
+
+    def body(carry, xs):
+        lo_car, sh_car, st = carry
+        lo_x, sh_x = xs
+        env_low = list(lo_c) + list(lo_car) + list(lo_x)
+        env_sh = list(sh_c) + list(sh_car) + list(sh_x)
+        lo_out, sh_out, st2 = _eval(closed.jaxpr, closed.consts, env_low,
+                                    env_sh, policy, threshold, impl, rec, st,
+                                    prefix)
+        lo_out = tuple(lo_out)
+        sh_out = tuple(sh_out)
+        return ((lo_out[:ncarry], sh_out[:ncarry], st2),
+                (lo_out[ncarry:], sh_out[ncarry:]))
+
+    (lo_fin, sh_fin, stats), (lo_ys, sh_ys) = lax.scan(
+        body, (lo_carry, sh_carry, stats), (lo_xs, sh_xs),
+        length=p["length"], reverse=p["reverse"], unroll=p["unroll"])
+    return list(lo_fin) + list(lo_ys), list(sh_fin) + list(sh_ys), stats
+
+
+_MEM_HOPS = {
+    "jit": _mem_call, "pjit": _mem_call, "closed_call": _mem_call,
+    "remat2": _mem_call, "checkpoint": _mem_call,
+    "custom_jvp_call": _mem_call, "custom_vjp_call": _mem_call,
+    "scan": _mem_scan,
+}

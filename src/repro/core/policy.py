@@ -1,0 +1,221 @@
+"""Truncation policies: *where* and *what* to truncate.
+
+Mirrors RAPTOR's configuration surface:
+  * program scope      -> rule with scope="**"
+  * function/module    -> scope glob over the ``jax.named_scope`` name stack
+                          (our models name every module: "layer/attn/qkv", ...)
+  * width-conditional  -> ``from_width`` (RAPTOR's "64_to_5_14;32_to_3_8")
+  * granular           -> ``ops`` / ``exclude_ops`` primitive filters
+  * fenced-off regions -> policy-level ``excludes`` (paper §6.3 module
+                          exclusion flow: "exclude Recon, re-run")
+  * dynamic truncation -> ``mask`` rule field: truncate only elements where a
+                          runtime predicate holds (the AMR M-l analogue)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat, parse_format
+
+# --------------------------------------------------------------------------
+# scope glob matching over name stacks ("a/b/c"), '**' crosses '/' boundaries
+# --------------------------------------------------------------------------
+
+
+def _translate(pattern: str) -> str:
+    out = []
+    i = 0
+    while i < len(pattern):
+        c = pattern[i]
+        if c == "*":
+            if pattern[i:i + 2] == "**":
+                out.append(".*")
+                i += 2
+                if i < len(pattern) and pattern[i] == "/":
+                    i += 1  # '**/' also matches zero segments
+            else:
+                out.append("[^/]*")
+                i += 1
+        elif c == "?":
+            out.append("[^/]")
+            i += 1
+        else:
+            out.append(re.escape(c))
+            i += 1
+    return "".join(out)
+
+
+def compile_scope(pattern: str):
+    """Compile a scope glob. A pattern matches if it matches the full name
+    stack or any of its prefixes at '/' boundaries (so ``layer/attn`` matches
+    eqns whose stack is ``layer/attn/qkv/...`` — RAPTOR's "truncate the whole
+    call tree below the marked function")."""
+    rx = re.compile(_translate(pattern) + r"(/.*)?$")
+    return rx
+
+
+def scope_matches(rx, name_stack: str) -> bool:
+    return rx.match(name_stack) is not None
+
+
+_WRAPPER_RE = re.compile(
+    r"^(?:jvp|transpose|vmap|pmap|remat|checkpoint|custom_jvp|custom_vjp)"
+    r"\((.*)\)$")
+_DROP_SEGMENTS = frozenset({"", "rematted_computation", "checkpoint"})
+
+
+def normalize_stack(name_stack: str) -> str:
+    """Strip autodiff/remat decorations so user scopes are stable under
+    jax.grad / jax.checkpoint: "transpose(jvp(mlp))/dot" -> "mlp/dot".
+    RAPTOR's function scopes must keep matching in the backward pass."""
+    out = []
+    for seg in name_stack.split("/"):
+        while True:
+            m = _WRAPPER_RE.match(seg)
+            if not m:
+                break
+            seg = m.group(1)
+        if seg not in _DROP_SEGMENTS:
+            out.append(seg)
+    return "/".join(out)
+
+
+def join_stack(prefix: str, name_stack: str) -> str:
+    """Join an outer HOP scope prefix with an inner (relative) name stack —
+    eqns inside scan/cond/jit bodies carry stacks relative to the HOP eqn."""
+    if prefix and name_stack:
+        return f"{prefix}/{name_stack}"
+    return prefix or name_stack
+
+
+# --------------------------------------------------------------------------
+# dynamic (state-dependent) truncation masks — paper's "dynamic truncation"
+# --------------------------------------------------------------------------
+
+MaskFn = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def magnitude_below(threshold: float) -> MaskFn:
+    """Truncate only elements with |x| < threshold — the transformer analogue
+    of 'truncate AMR blocks where the solution is smooth'."""
+    def fn(x):
+        return jnp.abs(x) < threshold
+    fn.__name__ = f"magnitude_below_{threshold}"
+    return fn
+
+
+def magnitude_above(threshold: float) -> MaskFn:
+    def fn(x):
+        return jnp.abs(x) > threshold
+    fn.__name__ = f"magnitude_above_{threshold}"
+    return fn
+
+
+# --------------------------------------------------------------------------
+# rules & policy
+# --------------------------------------------------------------------------
+
+# structural primitives never produce new FP values — skipping them is
+# exact and keeps op-mode overhead at one quantize per *arithmetic* op.
+STRUCTURAL_PRIMS = frozenset({
+    "reshape", "transpose", "broadcast_in_dim", "slice", "dynamic_slice",
+    "dynamic_update_slice", "concatenate", "gather", "pad", "rev", "squeeze",
+    "select_n", "copy", "stop_gradient", "iota", "split",
+    "reduce_max", "reduce_min", "max", "min", "abs", "neg", "sign",
+    "expand_dims", "real", "imag", "device_put", "broadcast",
+    "clamp", "sort", "argmax", "argmin", "reduce_and", "reduce_or",
+    "eq", "ne", "lt", "le", "gt", "ge", "and", "or", "not", "xor",
+    "is_finite", "floor", "ceil", "round", "sharding_constraint",
+    "optimization_barrier", "layout_constraint",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class TruncationRule:
+    """One truncation instruction: ops in ``scope`` whose output dtype width
+    matches ``from_width`` are rounded onto ``fmt``'s grid."""
+
+    fmt: FPFormat
+    scope: str = "**"
+    from_width: Optional[int] = None          # 16/32/64; None = any float
+    ops: Optional[Tuple[str, ...]] = None     # whitelist of primitive names
+    exclude_ops: Tuple[str, ...] = ()
+    quantize_dot_inputs: bool = False         # emulate low-precision MXU inputs
+    mask: Optional[MaskFn] = None             # dynamic truncation predicate
+
+    def __post_init__(self):
+        object.__setattr__(self, "fmt", parse_format(self.fmt))
+        object.__setattr__(self, "_rx", compile_scope(self.scope))
+
+    def matches(self, name_stack: str, prim_name: str, out_dtype) -> bool:
+        if prim_name in STRUCTURAL_PRIMS:
+            return False
+        if self.ops is not None and prim_name not in self.ops:
+            return False
+        if prim_name in self.exclude_ops:
+            return False
+        if not jnp.issubdtype(out_dtype, jnp.floating):
+            return False
+        if self.from_width is not None:
+            if jnp.dtype(out_dtype).itemsize * 8 != self.from_width:
+                return False
+        return scope_matches(self._rx, name_stack)
+
+
+@dataclasses.dataclass(frozen=True)
+class TruncationPolicy:
+    """An ordered rule list plus fenced-off scopes. The *first* matching rule
+    wins; ``excludes`` override everything (paper's iterative exclusion)."""
+
+    rules: Tuple[TruncationRule, ...]
+    excludes: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if isinstance(self.rules, TruncationRule):
+            object.__setattr__(self, "rules", (self.rules,))
+        object.__setattr__(self, "rules", tuple(self.rules))
+        object.__setattr__(self, "excludes", tuple(self.excludes))
+        object.__setattr__(
+            self, "_ex_rx", tuple(compile_scope(p) for p in self.excludes))
+
+    def rule_for(self, name_stack: str, prim_name: str, out_dtype
+                 ) -> Optional[TruncationRule]:
+        name_stack = normalize_stack(name_stack)
+        for rx in self._ex_rx:
+            if scope_matches(rx, name_stack):
+                return None
+        for rule in self.rules:
+            if rule.matches(name_stack, prim_name, out_dtype):
+                return rule
+        return None
+
+    def excluding(self, *scopes: str) -> "TruncationPolicy":
+        return dataclasses.replace(self, excludes=self.excludes + tuple(scopes))
+
+    # ---- constructors -----------------------------------------------------
+    @staticmethod
+    def everywhere(fmt, **kw) -> "TruncationPolicy":
+        """Program-scope truncation (RAPTOR --raptor-truncate-all)."""
+        return TruncationPolicy(rules=(TruncationRule(fmt=fmt, **kw),))
+
+    @staticmethod
+    def scoped(scope: str, fmt, **kw) -> "TruncationPolicy":
+        return TruncationPolicy(rules=(TruncationRule(fmt=fmt, scope=scope, **kw),))
+
+    @staticmethod
+    def from_flag(flag: str) -> "TruncationPolicy":
+        """Parse RAPTOR's flag syntax, e.g. ``"64_to_5_14;32_to_3_8"``."""
+        rules = []
+        for part in flag.split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            width, _, em = part.partition("_to_")
+            e, m = em.split("_")
+            rules.append(TruncationRule(
+                fmt=FPFormat(int(e), int(m)), from_width=int(width)))
+        return TruncationPolicy(rules=tuple(rules))

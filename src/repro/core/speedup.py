@@ -1,0 +1,150 @@
+"""Hardware co-design speedup model (paper §7.2, Table 4, Fig. 8).
+
+The paper models a CPU whose die area is split between FP64 and one
+low-precision FPU, with per-precision performance densities extrapolated from
+FPNew, then predicts speedup as  T = sum_i N_i / (A_i * P_i)  for the op
+counts N_i collected by the runtime, plus a memory-traffic model and a
+roofline crossover to pick which bound applies.
+
+We re-parameterize for the TPU v5e target:
+  * compute: MXU peak scales with operand width (bf16 197 TFLOP/s baseline;
+    fp8 2x; f32 ~1/3 — vector ops scale similarly on the VPU)
+  * memory: HBM 819 GB/s; truncated formats move proportionally fewer bytes
+  * the same A_i * P_i area trade is exposed for co-design studies: given a
+    truncated-fraction profile, what MXU precision mix maximizes throughput
+    under a fixed silicon budget?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+from repro.core.counters import CountReport
+from repro.core.formats import FPFormat, parse_format
+
+# ---- hardware constants (TPU v5e) -------------------------------------------
+PEAK_BF16_FLOPS = 197e12         # per chip
+HBM_BW = 819e9                   # bytes/s per chip
+ICI_BW = 50e9                    # bytes/s per link
+
+# FPNew performance-density table from the paper (Table 4), normalized to
+# fp64 = 1.0 — used for the CPU-style co-design variant.
+FPNEW_PERF_DENSITY = {
+    "fp64": 1.00,
+    "fp32": 2.65,
+    "fp16": 7.30,
+    "e5m2": 18.41,
+}
+
+
+def _width_bits(fmt: FPFormat) -> int:
+    return 1 + fmt.exp_bits + fmt.man_bits
+
+
+def tpu_relative_throughput(fmt: FPFormat) -> float:
+    """Relative FLOP/s of ops on values storable in ``fmt`` vs bf16 = 1.0.
+
+    TPU generations roughly double matrix throughput per halving of operand
+    width; emulated widths snap up to the next hardware container
+    (<=8 -> fp8 2x, <=16 -> bf16 1x, else f32 1/3)."""
+    w = _width_bits(fmt)
+    if w <= 8:
+        return 2.0
+    if w <= 16:
+        return 1.0
+    return 1.0 / 3.0
+
+
+def container_bytes(fmt: FPFormat) -> int:
+    w = _width_bits(fmt)
+    if w <= 8:
+        return 1
+    if w <= 16:
+        return 2
+    return 4
+
+
+@dataclasses.dataclass
+class SpeedupEstimate:
+    compute_bound: float         # predicted speedup if compute bound
+    memory_bound: float          # predicted speedup if memory bound
+    operational_intensity: float  # flops/byte of the *baseline* workload
+    bound: str                   # which side of the roofline the baseline is on
+
+    @property
+    def predicted(self) -> float:
+        return self.compute_bound if self.bound == "compute" else self.memory_bound
+
+
+def estimate_speedup(report: CountReport,
+                     baseline_fmt: str = "fp32",
+                     peak_flops: float = PEAK_BF16_FLOPS,
+                     hbm_bw: float = HBM_BW) -> SpeedupEstimate:
+    """Paper Fig. 8: predicted speedup of a truncation profile vs running
+    everything in ``baseline_fmt``.
+
+    compute model:  T = sum_i N_i / (peak * rel_throughput_i)
+    memory model:   T = sum_i B_i * (container_i / baseline_container) / bw
+    """
+    base = parse_format(baseline_fmt)
+    base_tp = tpu_relative_throughput(base)
+    base_bytes = container_bytes(base)
+
+    total_flops = report.total_flops
+    total_bytes = sum(report.bytes_by_fmt.values())
+    if total_flops == 0:
+        return SpeedupEstimate(1.0, 1.0, 0.0, "compute")
+
+    t_base_c = total_flops / (peak_flops * base_tp)
+    t_base_m = total_bytes / hbm_bw
+
+    t_mix_c = 0.0
+    t_mix_m = 0.0
+    for key, flops in report.flops_by_fmt.items():
+        fmt = base if key == "full" else parse_format(key)
+        t_mix_c += flops / (peak_flops * tpu_relative_throughput(fmt))
+        nbytes = report.bytes_by_fmt.get(key, 0.0)
+        t_mix_m += nbytes * (container_bytes(fmt) / base_bytes) / hbm_bw
+
+    oi = total_flops / max(total_bytes, 1.0)
+    ridge = (peak_flops * base_tp) / hbm_bw
+    bound = "compute" if oi >= ridge else "memory"
+    return SpeedupEstimate(
+        compute_bound=t_base_c / max(t_mix_c, 1e-30),
+        memory_bound=t_base_m / max(t_mix_m, 1e-30),
+        operational_intensity=oi,
+        bound=bound,
+    )
+
+
+def fpu_area_model(counts_by_fmt: Mapping[str, float],
+                   density: Mapping[str, float] = FPNEW_PERF_DENSITY,
+                   area_ratio_dbl_low: Optional[float] = None,
+                   ) -> Dict[str, float]:
+    """The paper's exact CPU-style model: two FPUs (double + one low
+    precision) in a fixed area budget; time = sum N_i / (A_i * P_i).
+
+    ``area_ratio_dbl_low`` defaults to the paper's A_dbl : A_low = 1.39
+    (derived from a 1:2 fp64:fp32 compute-capability split, A64FX-style).
+    Returns times per configuration, normalized to all-double = 1.0.
+    """
+    ratio = 1.39 if area_ratio_dbl_low is None else area_ratio_dbl_low
+    a_dbl = ratio / (1.0 + ratio)
+    a_low = 1.0 / (1.0 + ratio)
+    p_dbl = density["fp64"]
+
+    n_total = sum(counts_by_fmt.values())
+    t_all_dbl = n_total / (a_dbl * p_dbl)
+
+    out = {}
+    for key, dens in density.items():
+        if key == "fp64":
+            continue
+        t = 0.0
+        for fmt_key, n in counts_by_fmt.items():
+            if fmt_key == "full":
+                t += n / (a_dbl * p_dbl)
+            else:
+                t += n / (a_low * dens)
+        out[key] = t_all_dbl / max(t, 1e-30)
+    return out

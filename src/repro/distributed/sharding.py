@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (FSDP x TP x EP x (pod)DP).
+
+Models annotate activations with *logical* axis names via ``constrain``;
+parameters carry logical axes in their ``ParamDef``. A ``ShardingRules``
+table maps logical names onto mesh axes at lower time. When no mesh is
+active (CPU smoke tests) every annotation is a no-op.
+
+Conventions (see DESIGN.md §6):
+  activations:  batch -> (pod?, data), heads/kv/mlp/experts -> model,
+                embed/seq -> replicated (seq -> model for long-context KV
+                caches: context parallelism)
+  parameters:   embed -> data (FSDP), heads/mlp/vocab/experts -> model,
+                layer stack dim -> replicated
+Divisibility guard: an annotation on a dim not divisible by its mesh axis is
+dropped (e.g. kv_heads=2 on a 16-way model axis falls back to replicated and
+attention re-shards on q-heads instead).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# logical name -> mesh axis (or tuple) for ACTIVATIONS
+DEFAULT_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": "model",   # context-parallel KV cache for decode
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qk": None,
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "state": None,
+}
+
+# logical name -> mesh axis for PARAMETERS (training: FSDP x TP)
+DEFAULT_PARAM_RULES = {
+    "layers": None,
+    "embed": "data",        # FSDP
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "qk": None,
+    "state": None,
+    "conv": None,
+}
+
+
+# serving: TP-only — no per-layer FSDP all-gathers on the decode critical
+# path (used when bf16 params fit a single model-parallel shard group)
+SERVE_PARAM_RULES = {**DEFAULT_PARAM_RULES, "embed": None}
+
+
+@dataclasses.dataclass
+class ShardingContext:
+    mesh: Optional[Mesh] = None
+    act_rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_ACT_RULES))
+    param_rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_PARAM_RULES))
+
+
+_state = threading.local()
+
+
+def _ctx() -> ShardingContext:
+    if not hasattr(_state, "ctx"):
+        _state.ctx = ShardingContext()
+    return _state.ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], act_rules: Optional[dict] = None,
+             param_rules: Optional[dict] = None):
+    old = getattr(_state, "ctx", None)
+    _state.ctx = ShardingContext(
+        mesh=mesh,
+        act_rules=dict(act_rules or DEFAULT_ACT_RULES),
+        param_rules=dict(param_rules or DEFAULT_PARAM_RULES),
+    )
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _state.ctx
+        else:
+            yield _state.ctx
+    finally:
+        if old is None:
+            del _state.ctx
+        else:
+            _state.ctx = old
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 0
+    return math.prod(mesh.shape[a] for a in axis if a in mesh.shape)
+
+
+def _resolve(mesh: Mesh, rules: dict, logical: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+    spec = []
+    used = set()
+    for name, dim in zip(logical, shape):
+        axis = rules.get(name) if name is not None else None
+        if axis is not None:
+            if isinstance(axis, tuple):
+                axis = tuple(a for a in axis if a in mesh.shape and a not in used)
+                axis = axis or None
+            elif axis not in mesh.shape or axis in used:
+                axis = None
+        if axis is not None:
+            size = _mesh_axis_size(mesh, axis)
+            if size <= 1 or dim % size != 0:
+                axis = None  # divisibility guard
+        if axis is not None:
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                used.add(a)
+        spec.append(axis)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def constrain(x, *logical: Optional[str]):
+    """Apply a logical-axis sharding constraint to an activation. No-op
+    without an active mesh (single-device smoke tests)."""
+    ctx = _ctx()
+    if ctx.mesh is None or ctx.mesh.size == 1:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank mismatch: {logical} vs {x.shape}")
+    spec = _resolve(ctx.mesh, ctx.act_rules, logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def param_sharding(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+                   mesh: Mesh) -> NamedSharding:
+    ctx = _ctx()
+    spec = _resolve(mesh, ctx.param_rules, logical, shape)
+    return NamedSharding(mesh, spec)
+
+
+def param_pspec(shape, logical, mesh) -> P:
+    return _resolve(_ctx().mesh or mesh, _ctx().param_rules, logical, shape)

@@ -1,0 +1,104 @@
+"""Pallas TPU flash attention (causal / sliding-window / GQA).
+
+Tiling: grid = (batch*kv_heads, q_head_group, q_blocks); each program owns
+one q block (block_q x D) and loops over kv blocks with a fori_loop carrying
+the running (max, denom, acc) — KV is read once per (group, q-block), never
+materialized at Hq (the grouped-query memory win). Causal programs skip kv
+blocks above the diagonal (the classic ~2x flop win).
+
+VMEM per program at (block_q=512, block_k=512, D=128):
+q 256 KiB + kv block 2x256 KiB + p 1 MiB + acc 256 KiB ~= 2 MiB,
+double-bufferable inside the ~128 MiB v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
+                 seq_len, causal, window):
+    qb = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (block_q, D)
+
+    nk = seq_len // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[0, kb].astype(jnp.float32)               # (block_k, D)
+        v = v_ref[0, kb].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qi = qb * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        ki = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= qi >= ki
+        if window is not None:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+    # causal: only kv blocks intersecting the lower triangle
+    nk_eff = ((qb + 1) * block_q + block_k - 1) // block_k if causal else nk
+    m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           scale=None, block_q: int = 512, block_k: int = 512,
+                           interpret: bool = False):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D/Dv). Returns (B, Hq, S, Dv)."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+
+    qr = q.reshape(B * Hkv, G, S, D)
+    kr = k.reshape(B * Hkv, S // block_k, block_k, D)
+    vr = v.reshape(B * Hkv, S // block_k, block_k, Dv)
+    grid = (B * Hkv, G, S // block_q)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, seq_len=S, causal=causal,
+                          window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda bh, g, qb: (bh, g, qb, 0)),
+            pl.BlockSpec((1, S // block_k, block_k, D),
+                         lambda bh, g, qb: (bh, 0, 0, 0)),
+            pl.BlockSpec((1, S // block_k, block_k, Dv),
+                         lambda bh, g, qb: (bh, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                               lambda bh, g, qb: (bh, g, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, S, Dv), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, Hq, S, Dv)

@@ -1,0 +1,26 @@
+"""Dispatching wrapper: Pallas kernel on TPU, chunked-jnp flash elsewhere.
+
+The chunked-jnp path (models/attention.flash_attention) shares the exact
+blockwise-softmax contract, so dry-run HLO on CPU and kernel execution on
+TPU describe the same algorithm.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.models.attention import flash_attention as flash_attention_xla
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None, scale=None,
+                    impl: str = "auto", **kw):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, **kw)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, interpret=True, **kw)
+    return flash_attention_xla(q, k, v, causal=causal, window=window,
+                               scale=scale)

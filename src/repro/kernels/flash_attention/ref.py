@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash attention kernel: naive masked softmax
+attention with explicit KV-head repetition (memory-hungry but obviously
+correct; tests compare kernel vs this on swept shapes/dtypes)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None):
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((S, k.shape[2]), bool)
+    if causal:
+        mask &= i >= j
+    if window is not None:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vr.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,90 @@
+"""Public jit'd quantization op with implementation dispatch.
+
+``impl``:
+  * ``'auto'``      — pallas on TPU, pure-jnp ref elsewhere (CPU dry-runs must
+                      not lower pallas kernels; see DESIGN.md §4)
+  * ``'ref'``       — pure-jnp oracle
+  * ``'pallas'``    — compiled pallas kernel (TPU)
+  * ``'interpret'`` — pallas kernel in interpret mode (CPU validation)
+
+Fast paths (RAPTOR's zero-overhead hardware mode): when (e,m) matches a
+hardware storage type and overflow semantics agree, emit a plain convert
+pair instead of the bit-math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FPFormat, parse_format
+from repro.kernels.quantize_em import kernel as _kernel
+from repro.kernels.quantize_em import ref as _ref
+
+_HW_DTYPES = {(8, 7): jnp.bfloat16, (5, 10): jnp.float16}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize(x, fmt, *, impl: str = "auto"):
+    """Round every element of float array ``x`` onto the (e,m) grid of ``fmt``.
+
+    Non-float inputs pass through unchanged. The result dtype equals the
+    input dtype (values merely lie on the coarser grid) — op-mode semantics.
+    """
+    fmt: FPFormat = parse_format(fmt)
+    dt = jnp.dtype(x.dtype) if hasattr(x, "dtype") else None
+    if dt is None or not jnp.issubdtype(dt, jnp.floating):
+        return x
+
+    # identity: target grid at least as fine as the storage grid
+    storage_bits = jnp.finfo(dt).nmant
+    storage_exp = {jnp.dtype(jnp.float64): 11, jnp.dtype(jnp.float32): 8,
+                   jnp.dtype(jnp.bfloat16): 8, jnp.dtype(jnp.float16): 5}[dt]
+    if (fmt.man_bits >= storage_bits and fmt.exp_bits >= storage_exp
+            and not fmt.saturate and fmt.ieee_inf):
+        return x
+
+    # hardware convert-pair fast path
+    hw = _HW_DTYPES.get((fmt.exp_bits, fmt.man_bits))
+    if hw is not None and not fmt.saturate and fmt.ieee_inf:
+        return x.astype(hw).astype(dt)
+
+    # carrier selection: f64 stays f64 (CPU), everything else goes via f32
+    if dt == jnp.dtype(jnp.float64):
+        return _ref.quantize_ref_fmt(x, fmt)
+
+    xf = x.astype(jnp.float32)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+
+    if impl == "ref":
+        y = _ref.quantize_ref_fmt(xf, fmt)
+    elif impl in ("pallas", "interpret"):
+        y = _pallas_any_shape(xf, fmt, interpret=(impl == "interpret"))
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.astype(dt)
+
+
+def _pallas_any_shape(xf, fmt: FPFormat, *, interpret: bool):
+    """Flatten/pad to (rows, LANES), run the kernel, restore the shape."""
+    lanes = _kernel.LANES
+    n = xf.size
+    if n == 0:
+        return xf
+    rows = -(-n // lanes)
+    pad = rows * lanes - n
+    flat = jnp.ravel(xf)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    y2d = _kernel.quantize_2d(
+        flat.reshape(rows, lanes),
+        exp_bits=fmt.exp_bits, man_bits=fmt.man_bits, saturate=fmt.saturate,
+        ieee_inf=fmt.ieee_inf, interpret=interpret,
+    )
+    out = jnp.ravel(y2d)
+    if pad:
+        out = out[:n]
+    return out.reshape(xf.shape)

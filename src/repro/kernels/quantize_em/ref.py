@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for arbitrary (e, m) round-to-nearest-even quantization.
+
+This is the TPU-native replacement for RAPTOR's MPFR emulation: instead of a
+scalar correctly-rounded library call per operation, we round the *carrier*
+(f32/f64) result of each op onto the representable grid of the target
+``FPFormat`` with pure bit manipulation — fully vectorizable.
+
+Semantics (validated against ml_dtypes for every hardware format in tests):
+  * round-to-nearest, ties-to-even on the target grid
+  * gradual underflow onto the target's subnormal grid
+  * overflow -> +/-inf (IEEE layouts) / NaN (fn layouts) / +/-max_finite
+    (``saturate`` formats)
+  * NaN preserved, +/-inf preserved, +/-0 preserved
+Known carrier-precision floor: inputs that are subnormal *in the carrier*
+combined with a target whose exponent range exceeds the carrier's cannot be
+re-normalized (DESIGN.md §7); irrelevant for every profiling configuration
+in this repo.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+_CARRIER = {
+    jnp.dtype("float32"): (jnp.int32, 23),
+    jnp.dtype("float64"): (jnp.int64, 52),
+}
+
+
+def _format_constants(exp_bits: int, man_bits: int, ieee_inf: bool):
+    bias = (1 << (exp_bits - 1)) - 1
+    max_exp = (1 << exp_bits) - (2 if ieee_inf else 1) - bias
+    min_exp = 1 - bias
+    if ieee_inf:
+        max_finite = 2.0 ** max_exp * (2.0 - 2.0 ** (-min(man_bits, 52)))
+    else:
+        max_finite = 2.0 ** max_exp * (2.0 - 2.0 ** (1 - min(man_bits, 52)))
+    min_normal = 2.0 ** min_exp
+    sub_scale = 2.0 ** (min_exp - man_bits)
+    return max_exp, max_finite, min_normal, sub_scale
+
+
+def quantize_ref(x, exp_bits: int, man_bits: int, saturate: bool = False,
+                 ieee_inf: bool = True):
+    """Quantize ``x`` (f32 or f64) to the (exp_bits, man_bits) grid, RNE.
+
+    Returns an array of the same dtype as ``x`` whose values all lie on the
+    target format's representable grid.
+    """
+    dt = jnp.dtype(x.dtype)
+    if dt not in _CARRIER:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    int_dtype, c_man = _CARRIER[dt]
+    c_exp = 8 if c_man == 23 else 11
+    np_int = np.int32 if c_man == 23 else np.int64
+
+    _, max_finite, min_normal, sub_scale = _format_constants(
+        exp_bits, man_bits, ieee_inf)
+    k = c_man - man_bits  # mantissa bits to drop (<=0: nothing to drop)
+
+    # ---- 1) normal-range mantissa RNE via the bit trick --------------------
+    if k > 0:
+        bits = lax.bitcast_convert_type(x, int_dtype)
+        one = np_int(1)
+        half = np_int(1 << (k - 1))
+        lsb = lax.shift_right_logical(bits, np_int(k)) & one
+        rounded = (bits + (half - one) + lsb) & np_int(~((1 << k) - 1))
+        y = lax.bitcast_convert_type(rounded, dt)
+    else:
+        y = x
+
+    # ---- 2) subnormal range: RNE onto the fixed-point grid -----------------
+    # Only needed when the target exponent range is narrower than the
+    # carrier's (otherwise the carrier-aligned bit trick already lands on the
+    # right subnormal grid — see tests vs ml_dtypes bf16).
+    finfo = np.finfo(dt)
+    if exp_bits < c_exp and sub_scale >= float(finfo.tiny):
+        ss = np.array(sub_scale, dt)
+        mn = np.array(min_normal, dt)
+        x_sub = jnp.rint(x / ss) * ss
+        y = jnp.where(jnp.abs(x) < mn, x_sub, y)
+
+    # ---- 3) overflow --------------------------------------------------------
+    if max_finite <= float(finfo.max):
+        mf = np.array(max_finite, dt)
+        ovf = jnp.abs(y) > mf
+        if saturate:
+            y = jnp.where(ovf, jnp.sign(y) * mf, y)
+        elif ieee_inf:
+            y = jnp.where(ovf, jnp.sign(y) * np.array(np.inf, dt), y)
+        else:  # fn layout, non-saturating: overflow is NaN (ml_dtypes cast)
+            y = jnp.where(ovf, np.array(np.nan, dt), y)
+
+    # ---- 4) specials ----------------------------------------------------------
+    y = jnp.where(jnp.isnan(x), x, y)
+    y = jnp.where(jnp.isinf(x), x, y)  # inf passes through even when saturating
+    return y
+
+
+def quantize_ref_fmt(x, fmt):
+    """Convenience wrapper taking an ``FPFormat``."""
+    return quantize_ref(x, fmt.exp_bits, fmt.man_bits, fmt.saturate, fmt.ieee_inf)

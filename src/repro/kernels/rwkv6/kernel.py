@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the RWKV-6 (Finch) WKV recurrence, chunked.
+
+Per head h with per-token, per-channel decay w_t in (0,1):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Grid = (batch*heads,); each program owns one head's full sequence, scanning
+chunks of length C resident in VMEM. Within a chunk the recurrence is the
+exact step form (fori_loop over C tokens — numerically identical to the
+reference; the decay products stay implicit so no 1/A overflow issues), and
+only the (hd x hd) state crosses chunk boundaries. This is the TPU analogue
+of the within-chunk/cross-chunk split used by GPU linear-attention kernels,
+re-blocked for VMEM instead of shared memory.
+
+VMEM per program at (C=64, hd=64): r/k/v/w 4x64x64x4 = 64 KiB + state
+16 KiB + y 16 KiB — tiny; the win is HBM locality of the streamed chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                *, chunk: int, seq_len: int):
+    hd = r_ref.shape[-1]
+    u = u_ref[0].astype(jnp.float32)                       # (hd,)
+    nch = seq_len // chunk
+
+    def chunk_body(c, state):
+        r = r_ref[0, c].astype(jnp.float32)                # (C, hd)
+        k = k_ref[0, c].astype(jnp.float32)
+        v = v_ref[0, c].astype(jnp.float32)
+        w = w_ref[0, c].astype(jnp.float32)
+
+        def tok(t, carry):
+            s, y = carry
+            kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)  # (1, hd)
+            vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+            rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)
+            wt = jax.lax.dynamic_slice_in_dim(w, t, 1, 0)
+            kv = kt.T @ vt                                 # (hd, hd)
+            yt = rt @ (s + u[:, None] * kv)                # (1, hd)
+            s = wt.T * s + kv
+            y = jax.lax.dynamic_update_slice_in_dim(y, yt, t, 0)
+            return s, y
+
+        y0 = jnp.zeros((chunk, hd), jnp.float32)
+        state, y = jax.lax.fori_loop(0, chunk, tok, (state, y0))
+        y_ref[0, c] = y.astype(y_ref.dtype)
+        return state
+
+    state = s0_ref[0].astype(jnp.float32)
+    state = jax.lax.fori_loop(0, nch, chunk_body, state)
+    sT_ref[0] = state.astype(sT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64,
+                interpret: bool = False):
+    """r/k/v/w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd) f32.
+    Returns (y (B, H, S, hd) f32, sT (B, H, hd, hd) f32)."""
+    B, H, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nch = S // chunk
+
+    def shape4(t):
+        return t.reshape(B * H, nch, chunk, hd)
+
+    u_r = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    s0_r = s0.reshape(B * H, hd, hd)
+
+    grid = (B * H,)
+    y, sT = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk, seq_len=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hd), lambda i: (i, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nch, chunk, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(shape4(r), shape4(k), shape4(v), shape4(w), u_r, s0_r)
+    return y.reshape(B, H, S, hd), sT.reshape(B, H, hd, hd)

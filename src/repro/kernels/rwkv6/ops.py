@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the WKV6 recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def wkv6(r, k, v, w, u, s0, *, impl: str = "auto", chunk: int = 64):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk)
+    if impl == "interpret":
+        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    return wkv6_ref(r, k, v, w, u, s0)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the WKV6 recurrence (plain scan over tokens)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r/k/v/w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y (B, H, S, hd) f32, sT)."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+
+    def step(s, t):
+        r_t, k_t, v_t, w_t = t                      # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (r, k, v, w))
+    sT, ys = lax.scan(step, s0.astype(f32), xs)
+    return ys.transpose(1, 2, 0, 3), sT

@@ -1,0 +1,73 @@
+"""Production serving entrypoint: batched prefill + decode with optional
+RAPTOR truncation policy (mixed-precision deployment study).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b \
+        [--policy "scope:**/mlp=fp16"] [--requests 8] [--new-tokens 16]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core import truncate
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.train import parse_policy
+from repro.models import Model
+from repro.models.common import ParamDef
+from repro.serving.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--production", dest="smoke", action="store_false")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, "smoke" if args.smoke else "full")
+    model = Model(cfg)
+    # serving uses TP-only params when they fit (DESIGN.md §6 / §Perf it.6)
+    mesh = (make_host_mesh(model_parallel=2) if args.smoke
+            else make_production_mesh())
+    with shd.use_mesh(mesh, param_rules=shd.SERVE_PARAM_RULES):
+        defs = model.param_defs()
+        sh = jax.tree_util.tree_map(
+            lambda pd: shd.param_sharding(pd.shape, pd.axes, mesh),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))
+        params = jax.tree_util.tree_map(
+            jax.device_put, model.init(jax.random.PRNGKey(0)), sh)
+
+        policy = parse_policy(args.policy)
+        if policy is not None:
+            model.decode_step = truncate(model.decode_step, policy)  # type: ignore
+
+        eng = Engine(model, params, batch_size=args.batch,
+                     max_seq_len=args.max_seq)
+        rng = np.random.RandomState(0)
+        for rid in range(args.requests):
+            eng.submit(rid, rng.randint(1, cfg.vocab, args.prompt_len),
+                       max_new_tokens=args.new_tokens)
+        t0 = time.time()
+        done = eng.run()
+        dt = time.time() - t0
+        total = sum(len(r.out_tokens) for r in done.values())
+        print(f"served {len(done)} requests, {total} tokens in {dt:.1f}s "
+              f"({total / dt:.1f} tok/s on {mesh.size} devices)")
+        for rid in sorted(done):
+            print(f"  req {rid}: {done[rid].out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""ShapeDtypeStruct input factories for dry-runs (no device allocation).
+
+``input_specs`` produces weak-type-correct, shardable stand-ins for every
+model input of a given (arch x shape) cell; ``params_specs``/``cache_specs``
+do the same for weights, optimizer state and decode caches, with
+NamedShardings resolved through the logical-axis rules (FSDP x TP x EP; the
+divisibility guard downgrades kv-head sharding to context-parallel cache
+sharding automatically — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.distributed import sharding as shd
+from repro.models import Model
+from repro.models.common import ParamDef
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], logical):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = shd._resolve(mesh, shd._ctx().act_rules, logical, shape)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh: Optional[Mesh],
+                with_labels: bool = True) -> Dict[str, Any]:
+    """Batch stand-ins for a train/prefill cell."""
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                               ("batch", "seq", "embed"))
+        if cfg.rope_type == "mrope":
+            batch["positions"] = _sds((3, B, S), jnp.int32, mesh,
+                                      (None, "batch", "seq"))
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+    if cfg.family == "encdec":
+        batch["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                   ("batch", "seq", "embed"))
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, ("batch", "seq"))
+    return batch
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape, mesh):
+    B = shape.global_batch
+    toks = _sds((B,), jnp.int32, mesh, ("batch",))
+    if cfg.input_mode == "embeds":
+        emb = _sds((B, 1, cfg.d_model), jnp.bfloat16, mesh,
+                   ("batch", None, "embed"))
+        return toks, emb
+    return toks, None
+
+
+def params_specs(model: Model, mesh: Optional[Mesh]):
+    """Abstract params with FSDP x TP shardings."""
+    defs = model.param_defs()
+
+    def one(pd: ParamDef):
+        dt = jnp.dtype(model.cfg.dtype)
+        if mesh is None:
+            return jax.ShapeDtypeStruct(pd.shape, dt)
+        return jax.ShapeDtypeStruct(
+            pd.shape, dt, sharding=shd.param_sharding(pd.shape, pd.axes, mesh))
+
+    return jax.tree_util.tree_map(
+        one, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _zero1_spec(pd: ParamDef, mesh):
+    """TP sharding + 'data' on the first remaining divisible dim: optimizer
+    state fully sharded even when params are replicated over data (ZeRO-1)."""
+    base = shd._resolve(mesh, shd.SERVE_PARAM_RULES, pd.axes, pd.shape)
+    spec = list(base) + [None] * (len(pd.shape) - len(base))
+    dsize = mesh.shape.get("data", 1)
+    for i, (dim, cur) in enumerate(zip(pd.shape, spec)):
+        if cur is None and dsize > 1 and dim % dsize == 0:
+            spec[i] = "data"
+            break
+    from jax.sharding import PartitionSpec as P2
+    return NamedSharding(mesh, P2(*spec))
+
+
+def opt_state_specs(model: Model, mesh, state_dtype: str = "float32",
+                    zero1: bool = False):
+    """AdamW state stand-ins with param-aligned shardings (FSDP mode) or
+    fully data-sharded state over TP-only params (ZeRO-1 mode)."""
+    defs = model.param_defs()
+    sd = jnp.dtype(state_dtype)
+    half = jnp.dtype(model.cfg.dtype) in (jnp.bfloat16, jnp.float16)
+
+    def mk(pd: ParamDef, dt):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(pd.shape, dt)
+        if zero1:
+            return jax.ShapeDtypeStruct(pd.shape, dt,
+                                        sharding=_zero1_spec(pd, mesh))
+        return jax.ShapeDtypeStruct(
+            pd.shape, dt, sharding=shd.param_sharding(pd.shape, pd.axes, mesh))
+
+    leaf = lambda x: isinstance(x, ParamDef)
+    scalar = (jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, P()))
+              if mesh is not None else jax.ShapeDtypeStruct((), jnp.int32))
+    return {
+        "step": scalar,
+        "m": jax.tree_util.tree_map(lambda pd: mk(pd, sd), defs, is_leaf=leaf),
+        "v": jax.tree_util.tree_map(lambda pd: mk(pd, sd), defs, is_leaf=leaf),
+        "master": jax.tree_util.tree_map(
+            lambda pd: mk(pd, jnp.float32) if half else None, defs,
+            is_leaf=leaf),
+    }
+
+
+_CACHE_AXES_BY_KEY = {
+    "k": ("batch", "kv_heads", "cache_seq", None),
+    "v": ("batch", "kv_heads", "cache_seq", None),
+    "c_kv": ("batch", "cache_seq", None),
+    "k_rope": ("batch", "cache_seq", None),
+    "conv": ("batch", None, "mlp"),
+    "ssm": ("batch", "mlp", "state"),
+    "tm_state": ("batch", "heads", None, None),
+    "tm_shift": ("batch", None, "embed"),
+    "cm_shift": ("batch", None, "embed"),
+    "cross_k": ("batch", "kv_heads", "cache_seq", None),
+    "cross_v": ("batch", "kv_heads", "cache_seq", None),
+}
+
+
+def cache_specs(model: Model, shape: InputShape, mesh: Optional[Mesh]):
+    """Abstract decode cache with context-parallel-aware shardings."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    tmpl = jax.eval_shape(lambda: model.init_cache(B, S))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tmpl)
+    out = []
+    for path, sds in flat:
+        key = None
+        for p in reversed(path):
+            name = getattr(p, "key", getattr(p, "name", None))
+            if isinstance(name, str) and name in _CACHE_AXES_BY_KEY:
+                key = name
+                break
+        if mesh is None or key is None:
+            out.append(jax.ShapeDtypeStruct(sds.shape, sds.dtype))
+            continue
+        axes = _CACHE_AXES_BY_KEY[key]
+        # stacked layer caches carry a leading (L,) dim
+        if len(sds.shape) == len(axes) + 1:
+            axes = ("layers",) + axes
+        spec = shd._resolve(mesh, {**shd._ctx().act_rules, "layers": None},
+                            axes, sds.shape)
+        out.append(jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

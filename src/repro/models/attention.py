@@ -1,0 +1,364 @@
+"""Attention: GQA/MQA with RoPE/M-RoPE/partial-RoPE, sliding windows, MLA.
+
+Training/prefill use a chunked, memory-bounded flash attention (pure jnp
+scan over KV blocks with running max/denominator; the Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same contract and is
+selected on TPU via ``repro.kernels.flash_attention.ops``). KV heads are
+never materialized to Hq (grouped einsum) — a deliberate memory optimization
+over the naive repeat-KV formulation.
+
+Decode paths attend one new token against a pre-allocated cache; MLA decode
+uses the absorbed low-rank form so the cache stays (kv_lora + rope_dim) wide.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked flash attention (jnp reference; contract shared with Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, scale: Optional[float] = None,
+                    q_chunk: int = 1024, kv_chunk: int = 1024):
+    """q: (B, Hq, S, Dk); k: (B, Hkv, S, Dk); v: (B, Hkv, S, Dv).
+    Grouped-query: Hq % Hkv == 0. Returns (B, Hq, S, Dv)."""
+    B, Hq, S, Dk = q.shape
+    Hkv = k.shape[1]
+    Dv = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, S)
+    nq, nk = -(-S // q_chunk), -(-S // kv_chunk)
+    assert S % q_chunk == 0 and S % kv_chunk == 0, (S, q_chunk, kv_chunk)
+
+    qg = q.reshape(B, Hkv, G, S, Dk)
+    qs = qg.reshape(B, Hkv, G, nq, q_chunk, Dk).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(B, Hkv, nk, kv_chunk, Dk).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nk, kv_chunk, Dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = jnp.arange(S).reshape(nq, q_chunk)
+    k_pos = jnp.arange(S).reshape(nk, kv_chunk)
+
+    # sliding-window block skipping: with a static window each q chunk only
+    # needs the kv chunks covering [q0 - window + 1, q0 + Cq) — an O(S*W)
+    # instead of O(S^2) schedule (the Pallas kernel additionally skips
+    # above-diagonal blocks for plain causal).
+    n_win = nk
+    if causal and isinstance(window, int):
+        n_win = min(nk, (window + q_chunk - 1 + kv_chunk - 1) // kv_chunk + 1)
+
+    def per_q_chunk(carry, qc):
+        del carry
+        q_blk, qp = qc  # (B,Hkv,G,Cq,Dk), (Cq,)
+
+        if n_win < nk:
+            start = jnp.clip((qp[0] - (window - 1)) // kv_chunk, 0, nk - n_win)
+            ks_l = lax.dynamic_slice_in_dim(ks, start, n_win, axis=0)
+            vs_l = lax.dynamic_slice_in_dim(vs, start, n_win, axis=0)
+            kp_l = lax.dynamic_slice_in_dim(k_pos, start, n_win, axis=0)
+        else:
+            ks_l, vs_l, kp_l = ks, vs, k_pos
+
+        def per_kv_chunk(state, kc):
+            m, l, acc = state
+            k_blk, v_blk, kp = kc
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+            if causal:
+                mask &= qp[:, None] >= kp[None, :]
+            if window is not None:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_blk.shape[-2]), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_blk.shape[-2]), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_blk.shape[-2], Dv), jnp.float32)
+        # flash-style backward: recompute the (Cq,Ck) score/prob blocks in
+        # the bwd pass instead of storing them per chunk pair (autodiff of a
+        # plain scan would save every p matrix — the dominant train-memory
+        # term; see EXPERIMENTS.md §Perf)
+        per_kv = jax.checkpoint(per_kv_chunk, prevent_cse=False)
+        (m, l, acc), _ = lax.scan(per_kv, (m0, l0, a0),
+                                  (ks_l, vs_l, kp_l))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    per_q = jax.checkpoint(per_q_chunk, prevent_cse=False)
+    _, outs = lax.scan(per_q, None, (qs, q_pos))
+    # outs: (nq, B, Hkv, G, Cq, Dv) -> (B, Hq, S, Dv)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, S, Dv)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
+                     scale: Optional[float] = None, ring: bool = False):
+    """One-token attention. q: (B, Hq, Dk); caches: (B, Hkv, S, D*);
+    pos: scalar int32 — number of valid cache entries (the new token's index
+    is pos-1 after the cache update).
+
+    ``ring=True``: the cache is a ring buffer of size S == window; slot s
+    holds the token at position pos - ((pos - s) mod S) — negative means the
+    slot hasn't been written yet (masked). No separate window mask needed:
+    the ring IS the window."""
+    B, Hq, Dk = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+
+    qg = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    idx = jnp.arange(S)
+    if ring:
+        last = pos - 1  # index of the newest token (already inserted)
+        slot_pos = last - jnp.mod(last - idx, S)
+        valid = slot_pos[None, None, None, :] >= 0
+    else:
+        valid = idx[None, None, None, :] < pos
+        if window is not None:
+            valid &= idx[None, None, None, :] >= (pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, -1).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_param_defs(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    scale = 0.02
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    defs = {
+        "wq": ParamDef((d, H * hd), ("embed", "heads"), scale=scale),
+        "wk": ParamDef((d, Hkv * hd), ("embed", "kv_heads"), scale=scale),
+        "wv": ParamDef((d, Hkv * hd), ("embed", "kv_heads"), scale=scale),
+        "wo": ParamDef((H * hd, d), ("heads", "embed"), scale=o_scale),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * hd,), ("heads",), init="zeros")
+        defs["bk"] = ParamDef((Hkv * hd,), ("kv_heads",), init="zeros")
+        defs["bv"] = ParamDef((Hkv * hd,), ("kv_heads",), init="zeros")
+    return defs
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.rope_type == "rope":
+        q = common.apply_rope(q, positions, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+        k = common.apply_rope(k, positions, theta=cfg.rope_theta,
+                              fraction=cfg.rope_fraction)
+    elif cfg.rope_type == "mrope":
+        q = common.apply_mrope(q, positions, theta=cfg.rope_theta,
+                               sections=cfg.mrope_sections)
+        k = common.apply_mrope(k, positions, theta=cfg.rope_theta,
+                               sections=cfg.mrope_sections)
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg: ArchConfig, *, positions, causal: bool = True,
+                window: Optional[int] = None):
+    """Training/prefill attention. x: (B, S, d). Returns ((B,S,d), kv)."""
+    B, S, _ = x.shape
+    with jax.named_scope("qkv"):
+        q, k, v = _project_qkv(p, x, cfg, positions)
+        q = constrain(q, "batch", "heads", "seq", None)
+        k = constrain(k, "batch", "kv_heads", "seq", None)
+        v = constrain(v, "batch", "kv_heads", "seq", None)
+    with jax.named_scope("mix"):
+        o = flash_attention(q, k, v, causal=causal, window=window)
+        o = constrain(o, "batch", "heads", "seq", None)
+    with jax.named_scope("proj"):
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        out = o @ p["wo"].astype(x.dtype)
+        out = constrain(out, "batch", "seq", "embed")
+    return out, (k, v)
+
+
+def gqa_decode(p, x1, cache, pos, cfg: ArchConfig, *,
+               window: Optional[int] = None, positions3=None):
+    """x1: (B, 1, d); cache: dict(k=(B,Hkv,S,hd), v=...). pos: scalar count
+    of tokens already in the cache. When the cache was allocated ring-sized
+    (S == window < requested seq_len) the slot is pos mod S."""
+    B = x1.shape[0]
+    hd = cfg.resolved_head_dim
+    S_cache = cache["k"].shape[2]
+    ring = window is not None and S_cache == window
+    if cfg.rope_type == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(
+        p, x1, cfg, positions3 if cfg.rope_type == "mrope" else positions)
+    slot = jnp.mod(pos, S_cache) if ring else pos
+    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                              slot, axis=2)
+    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                              slot, axis=2)
+    o = decode_attention(q[:, :, 0], k_cache, v_cache, pos + 1,
+                         window=None if ring else window, ring=ring)
+    out = o.reshape(B, 1, -1) @ p["wo"].astype(x1.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype,
+                   window: Optional[int] = None):
+    """``window``: allocate a ring buffer of that size instead of the full
+    sequence (sliding-window layers never need more — the long_500k memory
+    win, EXPERIMENTS.md §Perf iteration 13)."""
+    hd = cfg.resolved_head_dim
+    S = min(seq_len, window) if window else seq_len
+    shape = (batch, cfg.n_kv_heads, S, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_param_defs(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "q_down": ParamDef((d, m.q_lora), ("embed", None)),
+        "q_norm": ParamDef((m.q_lora,), (None,), init="ones"),
+        "q_up": ParamDef((m.q_lora, H * (m.nope_head_dim + m.rope_head_dim)),
+                         (None, "heads")),
+        "kv_down": ParamDef((d, m.kv_lora + m.rope_head_dim), ("embed", None)),
+        "kv_norm": ParamDef((m.kv_lora,), (None,), init="ones"),
+        "kv_up": ParamDef((m.kv_lora, H * (m.nope_head_dim + m.v_head_dim)),
+                          (None, "heads")),
+        "wo": ParamDef((H * m.v_head_dim, d), ("heads", "embed"), scale=o_scale),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = common.rmsnorm(x @ p["q_down"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["q_up"].astype(x.dtype)).reshape(
+        B, S, H, m.nope_head_dim + m.rope_head_dim).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = common.apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    m = cfg.mla
+    kv = x @ p["kv_down"].astype(x.dtype)
+    c_kv, k_rope = kv[..., :m.kv_lora], kv[..., m.kv_lora:]
+    c_kv = common.rmsnorm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = common.apply_rope(k_rope[:, None], positions,
+                               theta=cfg.rope_theta)[:, 0]
+    return c_kv, k_rope          # (B,S,kv_lora), (B,S,rope_dim)
+
+
+def mla_forward(p, x, cfg: ArchConfig, *, positions):
+    """Training/prefill MLA in the expanded form."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    with jax.named_scope("mla_qkv"):
+        q_nope, q_rope = _mla_q(p, x, cfg, positions)
+        c_kv, k_rope = _mla_latent(p, x, cfg, positions)
+        kv = (c_kv @ p["kv_up"].astype(x.dtype)).reshape(
+            B, S, H, m.nope_head_dim + m.v_head_dim).transpose(0, 2, 1, 3)
+        k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, None],
+                                      (B, H, S, m.rope_head_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, "batch", "heads", "seq", None)
+        k = constrain(k, "batch", "heads", "seq", None)
+        v = constrain(v, "batch", "heads", "seq", None)
+    with jax.named_scope("mla_mix"):
+        scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+        o = flash_attention(q, k, v, causal=True, scale=scale)
+    with jax.named_scope("mla_proj"):
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, H * m.v_head_dim)
+        out = o @ p["wo"].astype(x.dtype)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, x1, cache, pos, cfg: ArchConfig):
+    """Absorbed-form decode: cache holds only (c_kv, k_rope)."""
+    m = cfg.mla
+    B = x1.shape[0]
+    H = cfg.n_heads
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, x1, cfg, positions)     # (B,H,1,dn),(B,H,1,dr)
+    c_new, kr_new = _mla_latent(p, x1, cfg, positions)
+    c_cache = lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    r_cache = lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # kv_up columns interleave [nope | v] per head
+    w_up = p["kv_up"].reshape(m.kv_lora, H, m.nope_head_dim + m.v_head_dim)
+    w_uk = w_up[..., :m.nope_head_dim]
+    w_uv = w_up[..., m.nope_head_dim:]
+    f32 = jnp.float32
+    # absorb W_uk into q: (B,H,dn) x (kv_lora,H,dn) -> (B,H,kv_lora)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, :, 0].astype(f32),
+                       w_uk.astype(f32))
+    s = jnp.einsum("bhl,bsl->bhs", q_lat, c_cache.astype(f32))
+    s = s + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(f32),
+                       r_cache.astype(f32))
+    s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    idx = jnp.arange(c_cache.shape[1])
+    s = jnp.where(idx[None, None, :] <= pos, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", pr, c_cache.astype(f32))
+    o = jnp.einsum("bhl,lhd->bhd", ctx_lat, w_uv.astype(f32))
+    out = o.reshape(B, 1, H * m.v_head_dim).astype(x1.dtype) @ p["wo"].astype(x1.dtype)
+    return out, {"c_kv": c_cache, "k_rope": r_cache}
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, m.rope_head_dim), dtype),
+    }

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts: top-k router + capacity-grouped expert matmuls.
+
+Dispatch strategy (TPU-native, FLOP-faithful): token->expert assignments are
+sorted, truncated to a per-expert capacity C = tokens*top_k/E * cf, gathered
+into a dense (E, C, d) block and processed with batched einsums — the same
+compute shape a grouped-matmul kernel (ragged_dot / Megablox) would see, so
+roofline numbers are honest (top_k * tokens * cf useful rows, not E * tokens
+as a dense-all-experts formulation would burn). Expert dim shards over the
+``model`` mesh axis (EP); GSPMD inserts the token all-to-all.
+
+Router math is f32 (precision-fragile — a profiling target in the paper's
+module-truncation study; see benchmarks/table2_memmode.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef, ACTIVATIONS
+
+
+def moe_param_defs(cfg: ArchConfig) -> dict:
+    mc = cfg.moe
+    d = cfg.d_model
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    defs = {
+        "router": ParamDef((d, mc.n_experts), ("embed", None)),
+        "wi": ParamDef((mc.n_experts, d, 2 * mc.d_expert),
+                       ("experts", "embed", "mlp")),
+        "wo": ParamDef((mc.n_experts, mc.d_expert, d),
+                       ("experts", "mlp", "embed"), scale=o_scale),
+    }
+    if mc.n_shared:
+        defs["shared_wi"] = ParamDef((d, 2 * mc.n_shared * mc.d_expert),
+                                     ("embed", "mlp"))
+        defs["shared_wo"] = ParamDef((mc.n_shared * mc.d_expert, d),
+                                     ("mlp", "embed"), scale=o_scale)
+    return defs
+
+
+def _routing(p, x, mc: MoEConfig):
+    """Returns (expert_ids, gates) with shapes (T, k), router probs in f32."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = lax.top_k(probs, mc.top_k)
+    if mc.renormalize:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return ids, gates
+
+
+def moe_forward(p, x, cfg: ArchConfig, capacity: Optional[int] = None):
+    """x: (B, S, d) -> (B, S, d). Capacity-dropped top-k MoE."""
+    mc = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = mc.n_experts, mc.top_k
+    if capacity is None:
+        capacity = int(math.ceil(T * K / E * mc.capacity_factor))
+        capacity = max(8, -(-capacity // 8) * 8)
+
+    xf = x.reshape(T, d)
+    with jax.named_scope("router"):
+        ids, gates = _routing(p, xf, mc)              # (T,K)
+
+    with jax.named_scope("dispatch"):
+        flat_ids = ids.reshape(-1)                    # (T*K,)
+        flat_tok = jnp.repeat(jnp.arange(T), K)       # token index per slot
+        order = jnp.argsort(flat_ids, stable=True)
+        sorted_ids = flat_ids[order]
+        sorted_tok = flat_tok[order]
+        counts = jnp.bincount(flat_ids, length=E)
+        offsets = jnp.cumsum(counts) - counts          # start of each expert
+        pos_in_expert = jnp.arange(T * K) - offsets[sorted_ids]
+        keep = pos_in_expert < capacity
+        dest = jnp.where(keep, sorted_ids * capacity + pos_in_expert, E * capacity)
+        # slot -> source token (sentinel row T = zeros)
+        slot_tok = jnp.full((E * capacity + 1,), T, jnp.int32)
+        slot_tok = slot_tok.at[dest].set(sorted_tok.astype(jnp.int32),
+                                         mode="drop")[:E * capacity]
+        x_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+        x_grp = x_pad[slot_tok].reshape(E, capacity, d)
+        x_grp = constrain(x_grp, "experts", None, "embed")
+
+    with jax.named_scope("experts"):
+        h = jnp.einsum("ecd,edf->ecf", x_grp, p["wi"].astype(x.dtype))
+        h = constrain(h, "experts", None, "mlp")
+        h = ACTIVATIONS["swiglu"](h)
+        y_grp = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+        y_grp = constrain(y_grp, "experts", None, "embed")
+
+    with jax.named_scope("combine"):
+        y_flat = y_grp.reshape(E * capacity, d)
+        y_flat = jnp.concatenate([y_flat, jnp.zeros((1, d), y_flat.dtype)])
+        # per (token, k) slot: value gathered back from its expert slot
+        slot_of = jnp.full((T * K,), E * capacity, jnp.int32)
+        slot_of = slot_of.at[order].set(
+            jnp.where(keep, dest, E * capacity).astype(jnp.int32))
+        y_tk = y_flat[slot_of].reshape(T, K, d)
+        g = gates.astype(jnp.float32)[..., None]
+        y = jnp.sum(y_tk.astype(jnp.float32) * g, axis=1).astype(x.dtype)
+
+    if mc.n_shared:
+        with jax.named_scope("shared"):
+            hs = ACTIVATIONS["swiglu"](xf @ p["shared_wi"].astype(x.dtype))
+            y = y + hs @ p["shared_wo"].astype(x.dtype)
+
+    return y.reshape(B, S, d)
+
+
+def aux_load_balance_loss(p, x, cfg: ArchConfig) -> jnp.ndarray:
+    """Switch-style load-balance auxiliary loss (f32)."""
+    mc = cfg.moe
+    T = x.shape[0] * x.shape[1]
+    xf = x.reshape(T, -1)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = lax.top_k(probs, mc.top_k)
+    occupancy = jnp.mean(
+        jax.nn.one_hot(ids, mc.n_experts, dtype=jnp.float32), axis=(0, 1))
+    importance = jnp.mean(probs, axis=0)
+    return mc.n_experts * jnp.sum(occupancy * importance)

@@ -1,0 +1,267 @@
+"""State-space sequence mixers: Mamba (Hymba's parallel SSM heads) and
+RWKV-6 "Finch" (data-dependent decay linear attention).
+
+Both are implemented as linear recurrences scanned over the sequence for the
+reference path; the chunked RWKV-6 Pallas kernel in
+``repro.kernels.rwkv6`` implements the identical contract for TPU. Decode
+paths carry O(1)-per-token state — this is why these archs run the
+``long_500k`` cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import ParamDef, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — Hymba's parallel-head branch
+# ---------------------------------------------------------------------------
+
+def mamba_param_defs(cfg: ArchConfig) -> dict:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di = sc.expand * d
+    dt_rank = sc.dt_rank or -(-d // 16)
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamDef((sc.conv_width, di), ("conv", "mlp"), scale=0.1),
+        "conv_b": ParamDef((di,), ("mlp",), init="zeros"),
+        "x_proj": ParamDef((di, dt_rank + 2 * sc.state_dim), ("mlp", None)),
+        "dt_proj": ParamDef((dt_rank, di), (None, "mlp"), scale=0.1),
+        "dt_bias": ParamDef((di,), ("mlp",), init="zeros"),
+        "a_log": ParamDef((di, sc.state_dim), ("mlp", "state"), init="zeros"),
+        "d_skip": ParamDef((di,), ("mlp",), init="ones"),
+        "out_proj": ParamDef((di, d), ("mlp", "embed"), scale=o_scale),
+    }
+
+
+def _mamba_core(p, xz, cfg: ArchConfig, conv_state, ssm_state, *, decode: bool):
+    """xz: (B, S, 2*di). Returns (y (B,S,di), conv_state, ssm_state)."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    dt_rank = sc.dt_rank or -(-cfg.d_model // 16)
+    x, z = jnp.split(xz, 2, axis=-1)
+    B_, S, _ = x.shape
+
+    # causal depthwise conv (width W): state carries the last W-1 inputs
+    W = sc.conv_width
+    if decode:
+        hist = jnp.concatenate([conv_state, x], axis=1)        # (B, W, di)
+        new_conv_state = hist[:, 1:]
+        xc = jnp.einsum("bwd,wd->bd", hist, p["conv_w"].astype(x.dtype))[:, None]
+    else:
+        pad = jnp.zeros((B_, W - 1, di), x.dtype)
+        hist = jnp.concatenate([pad, x], axis=1)
+        new_conv_state = hist[:, S:]                            # last W-1
+        xc = sum(hist[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+                 for i in range(W))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+
+    proj = xc @ p["x_proj"].astype(x.dtype)                     # (B,S,r+2N)
+    dt_r, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + sc.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))        # (B,S,di)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # (di,N)
+
+    f32 = jnp.float32
+
+    def step(h, t):
+        da_t, dbx_t, c_t = t
+        h = da_t * h + dbx_t                                    # (B,di,N)
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    if decode:
+        da = jnp.exp(dt.astype(f32)[..., None] * A)             # (B,1,di,N)
+        db_x = (dt.astype(f32) * xc.astype(f32))[..., None] \
+            * Bc.astype(f32)[..., None, :]
+        ssm_state, y1 = step(ssm_state.astype(f32),
+                             (da[:, 0], db_x[:, 0], Cc.astype(f32)[:, 0]))
+        y = y1[:, None].astype(x.dtype)
+    else:
+        # chunked over the sequence: bounds the (B,c,di,N) working set and
+        # (with per-chunk remat) caps autodiff residuals at one chunk
+        c = min(64, S)
+        assert S % c == 0, (S, c)
+        nch = S // c
+
+        @jax.checkpoint
+        def chunk_body(h, t):
+            dt_c, xc_c, b_c, cc_c = t                           # (B,c,...)
+            da = jnp.exp(dt_c.astype(f32)[..., None] * A)       # (B,c,di,N)
+            dbx = (dt_c.astype(f32) * xc_c.astype(f32))[..., None] \
+                * b_c.astype(f32)[..., None, :]
+            h, ys = lax.scan(step, h,
+                             (da.transpose(1, 0, 2, 3),
+                              dbx.transpose(1, 0, 2, 3),
+                              cc_c.astype(f32).transpose(1, 0, 2)))
+            return h, ys.transpose(1, 0, 2)                     # (B,c,di)
+
+        chunks = lambda t: t.reshape(B_, nch, c, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+        ssm_state, ys = lax.scan(
+            chunk_body, ssm_state.astype(f32),
+            (chunks(dt), chunks(xc), chunks(Bc), chunks(Cc)))
+        y = ys.transpose(1, 0, 2, 3).reshape(B_, S, di).astype(x.dtype)
+
+    y = y + xc * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y, new_conv_state, ssm_state
+
+
+def mamba_forward(p, x, cfg: ArchConfig):
+    """Training/prefill: x (B,S,d) -> (y (B,S,di->d), final states)."""
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    B = x.shape[0]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    conv0 = jnp.zeros((B, sc.conv_width - 1, di), x.dtype)
+    ssm0 = jnp.zeros((B, di, sc.state_dim), jnp.float32)
+    y, conv_state, ssm_state = _mamba_core(p, xz, cfg, conv0, ssm0, decode=False)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_decode(p, x1, cache, cfg: ArchConfig):
+    xz = x1 @ p["in_proj"].astype(x1.dtype)
+    y, conv_state, ssm_state = _mamba_core(
+        p, xz, cfg, cache["conv"], cache["ssm"], decode=True)
+    out = y @ p["out_proj"].astype(x1.dtype)
+    return out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_init_cache(cfg: ArchConfig, batch: int, dtype):
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, sc.conv_width - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, sc.state_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch)
+# ---------------------------------------------------------------------------
+
+_LORA_DIM = 64
+
+
+def rwkv6_param_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+    return {
+        # token-shift interpolation vectors for r,k,v,w,g
+        "mu": ParamDef((5, d), (None, "embed"), scale=0.1),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        # data-dependent decay LoRA:  w = exp(-exp(w0 + tanh(x A) B))
+        "w0": ParamDef((d,), ("embed",), init="zeros"),
+        "w_a": ParamDef((d, _LORA_DIM), ("embed", None), scale=0.1),
+        "w_b": ParamDef((_LORA_DIM, d), (None, "embed"), scale=0.1),
+        "bonus": ParamDef((H, hd), ("heads", None), scale=0.1),
+        "ln_scale": ParamDef((d,), ("embed",), init="ones"),
+        "wo": ParamDef((d, d), ("heads", "embed"), scale=o_scale),
+    }
+
+
+def _rwkv6_mix(p, x, x_prev, cfg: ArchConfig, state):
+    """Sequence mix. x: (B,S,d); x_prev: (B,1,d) last token of the previous
+    chunk (token shift); state: (B,H,hd,hd) f32. Returns (y, x_last, state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)           # shifted
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (xs - x) for i in range(5))
+
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+
+    f32 = jnp.float32
+    w_log = p["w0"].astype(f32) + jnp.tanh(
+        xw.astype(f32) @ p["w_a"].astype(f32)) @ p["w_b"].astype(f32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, S, H, hd)           # decay in (0,1)
+    u = p["bonus"].astype(f32)                                  # (H,hd)
+
+    def step(s, t):
+        r_t, k_t, v_t, w_t = t                                  # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]              # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    # chunked over sequence with per-chunk remat (matches the Pallas kernel's
+    # chunk structure; caps autodiff residuals at one chunk of states)
+    c = min(64, S)
+    assert S % c == 0, (S, c)
+    nch = S // c
+
+    @jax.checkpoint
+    def chunk_body(s, t):
+        r_c, k_c, v_c, w_c = t                                  # (c,B,H,hd)
+        s, ys = lax.scan(step, s, (r_c, k_c, v_c, w_c))
+        return s, ys
+
+    def chunks(t):  # (B,S,H,hd) -> (nch,c,B,H,hd)
+        return t.astype(f32).transpose(1, 0, 2, 3).reshape(
+            nch, c, B, H, hd)
+
+    state, ys = lax.scan(chunk_body, state.astype(f32),
+                         (chunks(r), chunks(k), chunks(v), chunks(w)))
+    y = ys.reshape(S, B, H, hd).transpose(1, 0, 2, 3).reshape(B, S, d)
+
+    # per-head group norm (RWKV uses GroupNorm(H); rms per head here)
+    yh = y.reshape(B, S, H, hd).astype(f32)
+    yh = yh * lax.rsqrt(jnp.mean(yh * yh, axis=-1, keepdims=True) + 1e-5)
+    y = (yh.reshape(B, S, d) * p["ln_scale"].astype(f32)).astype(x.dtype)
+    y = y * g
+    out = y @ p["wo"].astype(x.dtype)
+    return out, x[:, -1:], state
+
+
+def rwkv6_channel_defs(cfg: ArchConfig) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    o_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    return {
+        "mu": ParamDef((2, d), (None, "embed"), scale=0.1),
+        "wk": ParamDef((d, dff), ("embed", "mlp")),
+        "wv": ParamDef((dff, d), ("mlp", "embed"), scale=o_scale),
+        "wr": ParamDef((d, d), ("embed", None)),
+    }
+
+
+def rwkv6_channel_mix(p, x, x_prev, cfg: ArchConfig):
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kv = k @ p["wv"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv, x[:, -1:]
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    hd = d // H
+    return {
+        "tm_state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "tm_shift": jnp.zeros((batch, 1, d), dtype),
+        "cm_shift": jnp.zeros((batch, 1, d), dtype),
+    }

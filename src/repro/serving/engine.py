@@ -1,0 +1,105 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+A deliberately compact production shape: fixed-size decode batch, slot-based
+request table, prefill admits new requests into free slots, one jit'd
+decode_step per token across the whole batch. Cache memory is allocated
+once (max_seq_len) — the decode dry-run cells measure exactly this step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_size: int = 8,
+                 max_seq_len: int = 512, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.S = max_seq_len
+        self.greedy = greedy
+        self.cache = model.init_cache(batch_size, max_seq_len)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.lengths = np.zeros(batch_size, np.int32)
+        self._decode = jax.jit(model.decode_step)
+        self._queue: List[Request] = []
+        self._done: Dict[int, Request] = {}
+
+    # ---- request management ------------------------------------------------
+    def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int = 32):
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new_tokens))
+
+    def _admit(self):
+        """Admit a wave of queued requests into free slots. The cache keeps a
+        single shared position cursor (aligned batching), so a wave is only
+        admitted when all slots are free and prompts share one length —
+        left-padding / per-slot cursors are future work, documented here."""
+        if any(s is not None for s in self.slots) or not self._queue:
+            return
+        wave = self._queue[:self.B]
+        self._queue = self._queue[self.B:]
+        plen = len(wave[0].prompt)
+        assert all(len(r.prompt) == plen for r in wave), \
+            "aligned batching requires equal prompt lengths per wave"
+        self.cache = self.model.init_cache(self.B, self.S)
+        for slot, req in enumerate(wave):
+            self.slots[slot] = req
+        # batched prefill: column t of every prompt at once
+        for t in range(plen):
+            tok = np.zeros((self.B,), np.int32)
+            for slot, req in enumerate(wave):
+                tok[slot] = req.prompt[t]
+            _, self.cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(tok))
+        for slot, req in enumerate(wave):
+            self.lengths[slot] = plen
+
+    # ---- decode loop ----------------------------------------------------------
+    def step(self):
+        """One token for every live slot."""
+        self._admit()
+        live = [s for s in range(self.B) if self.slots[s] is not None]
+        if not live:
+            return False
+        tok = np.zeros((self.B,), np.int32)
+        for s in live:
+            req = self.slots[s]
+            tok[s] = (req.out_tokens[-1] if req.out_tokens
+                      else req.prompt[-1])
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tok))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for s in live:
+            req = self.slots[s]
+            req.out_tokens.append(int(nxt[s]))
+            self.lengths[s] += 1
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or self.lengths[s] >= self.S - 1):
+                req.done = True
+                self._done[req.rid] = req
+                self.slots[s] = None
+                self.lengths[s] = 0
+        return True
+
+    def run(self) -> Dict[int, Request]:
+        while self._queue or any(s is not None for s in self.slots):
+            self.step()
+        return self._done

@@ -1,0 +1,118 @@
+"""Train-step factory: remat + microbatch grad accumulation + optional
+RAPTOR truncation policy + gradient compression, ready for pjit.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with FSDP x TP shardings from
+``distributed.sharding``. The RAPTOR integration point: when
+``cfg.policy`` is set the *differentiated* loss (fwd+bwd jaxpr) is rewritten
+op-by-op — RAPTOR's whole-call-tree LTO semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.api import truncate
+from repro.core.policy import TruncationPolicy
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim import compression
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    grad_accum: int = 1
+    policy: Optional[TruncationPolicy] = None       # RAPTOR truncation
+    policy_impl: str = "auto"
+    grad_compression: Optional[str] = None          # None | "bf16" | "int8"
+    lr_schedule: Optional[Callable] = None          # step -> lr
+
+
+def make_train_step(model, tc: TrainConfig, grad_shardings=None):
+    """``grad_shardings``: optional pytree of NamedShardings (same structure
+    as params). Constraining gradients to the parameter sharding lets GSPMD
+    reduce-scatter the data-parallel gradient reduction instead of
+    all-reducing + re-sharding (EXPERIMENTS.md §Perf iteration 7)."""
+    cfg = model.cfg
+    accum = max(tc.grad_accum, 1)
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
+            g, grad_shardings)
+
+    def loss_fn(params, micro_batch):
+        return model.loss(params, micro_batch)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+    if tc.policy is not None:
+        grad_fn = truncate(grad_fn, tc.policy, impl=tc.policy_impl)
+
+    def split_micro(batch, i):
+        def slice_one(x):
+            if x.ndim == 0:
+                return x
+            # leading batch dim except (3,B,S) mrope positions
+            if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % accum == 0:
+                b = x.shape[1] // accum
+                return lax.dynamic_slice_in_dim(x, i * b, b, axis=1)
+            b = x.shape[0] // accum
+            return lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
+        return jax.tree_util.tree_map(slice_one, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if accum == 1:
+            loss, grads = grad_fn(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            def body(carry, i):
+                acc, loss_acc = carry
+                loss_i, g_i = grad_fn(params, split_micro(batch, i))
+                g_i = constrain_grads(g_i)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, g_i)
+                return (constrain_grads(acc), loss_acc + loss_i), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros = constrain_grads(zeros)
+            (grads, loss), _ = lax.scan(
+                body, (zeros, jnp.float32(0)), jnp.arange(accum))
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+
+        if tc.grad_compression == "bf16":
+            err = opt_state.get("err")
+            grads, err = compression.compress_bf16(grads, err)
+            opt_state = dict(opt_state, err=err)
+        elif tc.grad_compression == "int8":
+            err = opt_state.get("err")
+            q, err = compression.compress_int8(grads, err)
+            grads = compression.decompress_int8(q)
+            opt_state = dict(opt_state, err=err)
+
+        lr = (tc.lr_schedule(step) if tc.lr_schedule
+              else jnp.float32(tc.optimizer.lr))
+        inner = {k: opt_state[k] for k in ("step", "m", "v", "master")}
+        params, inner, om = adamw.apply_updates(
+            params, grads, inner, tc.optimizer, lr)
+        new_state = dict(opt_state, **inner)
+        metrics = {"loss": loss, "lr": lr, **om}
+        return params, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(model, params, tc: TrainConfig):
+    state = adamw.init_state(params, tc.optimizer)
+    if tc.grad_compression:
+        state["err"] = compression.init_error_buffer(params)
+    return state

@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.kernels.quantize_em.kernel import quantize_2d, LANES
+from repro.kernels.quantize_em import ref as qref
+from repro.models.attention import flash_attention as flash_xla
+
+
+# ---- flash attention ---------------------------------------------------------
+
+FLASH_CASES = [
+    # B, Hq, Hkv, S, D, window, causal, dtype
+    (2, 4, 2, 128, 32, None, True, jnp.float32),
+    (1, 8, 8, 64, 16, None, True, jnp.float32),
+    (2, 4, 1, 128, 32, 32, True, jnp.float32),
+    (1, 2, 2, 256, 64, None, False, jnp.float32),
+    (2, 6, 3, 128, 32, None, True, jnp.bfloat16),
+    (1, 4, 4, 128, 128, 64, True, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_pallas_vs_ref(case):
+    B, Hq, Hkv, S, D, win, causal, dtype = case
+    r = np.random.RandomState(hash(case) % 2 ** 31)
+    q = jnp.asarray(r.randn(B, Hq, S, D), dtype)
+    k = jnp.asarray(r.randn(B, Hkv, S, D), dtype)
+    v = jnp.asarray(r.randn(B, Hkv, S, D), dtype)
+    o = flash_attention_pallas(q, k, v, causal=causal, window=win,
+                               block_q=64, block_k=64, interpret=True)
+    o_ref = attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                 - o_ref.astype(jnp.float32)))) < tol
+
+
+@pytest.mark.parametrize("case", FLASH_CASES[:4])
+def test_flash_xla_vs_ref(case):
+    B, Hq, Hkv, S, D, win, causal, dtype = case
+    r = np.random.RandomState(hash(case) % 2 ** 31)
+    q = jnp.asarray(r.randn(B, Hq, S, D), dtype)
+    k = jnp.asarray(r.randn(B, Hkv, S, D), dtype)
+    v = jnp.asarray(r.randn(B, Hkv, S, D), dtype)
+    o = flash_xla(q, k, v, causal=causal, window=win, q_chunk=64, kv_chunk=64)
+    o_ref = attention_ref(q, k, v, causal=causal, window=win)
+    assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-5
+
+
+def test_flash_blocks_sweep():
+    r = np.random.RandomState(0)
+    q = jnp.asarray(r.randn(1, 2, 256, 32), jnp.float32)
+    k = jnp.asarray(r.randn(1, 2, 256, 32), jnp.float32)
+    v = jnp.asarray(r.randn(1, 2, 256, 32), jnp.float32)
+    o_ref = attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        o = flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                   block_k=bk, interpret=True)
+        assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-5, (bq, bk)
+
+
+# ---- rwkv6 -------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", [
+    (2, 3, 64, 16, 16), (1, 2, 128, 32, 64), (2, 1, 32, 8, 32),
+    (1, 4, 64, 64, 64),
+])
+def test_wkv6_pallas_vs_ref(case):
+    B, H, S, hd, chunk = case
+    r = np.random.RandomState(hash(case) % 2 ** 31)
+    rr = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    k = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    v = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    w = jnp.asarray(1 / (1 + np.exp(-r.randn(B, H, S, hd))), jnp.float32) * 0.98 + 0.01
+    u = jnp.asarray(r.randn(H, hd) * 0.1, jnp.float32)
+    s0 = jnp.asarray(r.randn(B, H, hd, hd) * 0.1, jnp.float32)
+    y1, s1 = wkv6_pallas(rr, k, v, w, u, s0, chunk=chunk, interpret=True)
+    y2, s2 = wkv6_ref(rr, k, v, w, u, s0)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-4
+    assert float(jnp.max(jnp.abs(s1 - s2))) < 1e-4
+
+
+def test_wkv6_chunk_invariance():
+    """Different chunk sizes must give identical results (state carry)."""
+    r = np.random.RandomState(7)
+    B, H, S, hd = 1, 2, 128, 16
+    rr = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    k = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    v = jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+    w = jnp.asarray(1 / (1 + np.exp(-r.randn(B, H, S, hd))), jnp.float32)
+    u = jnp.asarray(r.randn(H, hd) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    outs = [wkv6_pallas(rr, k, v, w, u, s0, chunk=c, interpret=True)[0]
+            for c in (16, 32, 128)]
+    for o in outs[1:]:
+        assert float(jnp.max(jnp.abs(o - outs[0]))) < 1e-4
+
+
+# ---- quantize_em block shapes -------------------------------------------------
+
+@pytest.mark.parametrize("rows", [1, 7, 8, 256, 1024])
+@pytest.mark.parametrize("block_rows", [8, 256, 1024])
+def test_quantize2d_block_sweep(rows, block_rows):
+    if rows % min(block_rows, rows):
+        pytest.skip("partial blocks handled by ops-level padding")
+    r = np.random.RandomState(rows)
+    x = jnp.asarray(r.randn(rows, LANES) * 1e3, jnp.float32)
+    a = quantize_2d(x, exp_bits=5, man_bits=7, block_rows=block_rows,
+                    interpret=True)
+    b = qref.quantize_ref(x, 5, 7)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---- property: attention invariances -------------------------------------------
+
+@given(seed=st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_flash_softmax_rowsum_property(seed):
+    """Attention output of constant V must be that constant (softmax sums
+    to 1 over the causal mask)."""
+    r = np.random.RandomState(seed)
+    q = jnp.asarray(r.randn(1, 2, 64, 16), jnp.float32)
+    k = jnp.asarray(r.randn(1, 2, 64, 16), jnp.float32)
+    v = jnp.ones((1, 2, 64, 16), jnp.float32) * 3.5
+    o = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32,
+                               interpret=True)
+    assert float(jnp.max(jnp.abs(o - 3.5))) < 1e-5

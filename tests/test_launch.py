@@ -1,0 +1,130 @@
+"""Launch-layer tests: specs factories, roofline analysis, census parsing,
+serve/zero1 sharding modes (single-device where possible; the 512-device
+paths are covered by the dry-run sweep itself)."""
+import json
+import types
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, SHAPES, cells, ARCH_IDS
+from repro.launch import specs as sp
+from repro.launch import roofline
+from repro.models import Model
+
+
+def test_input_specs_no_mesh():
+    cfg = get_config("glm4-9b")
+    batch = sp.input_specs(cfg, SHAPES["train_4k"], None)
+    assert batch["tokens"].shape == (256, 4096)
+    assert batch["labels"].dtype == jnp.int32
+
+
+def test_input_specs_stub_frontends():
+    vlm = get_config("qwen2-vl-7b")
+    b = sp.input_specs(vlm, SHAPES["train_4k"], None)
+    assert b["embeds"].shape == (256, 4096, vlm.d_model)
+    assert b["positions"].shape == (3, 256, 4096)
+    enc = get_config("seamless-m4t-large-v2")
+    b2 = sp.input_specs(enc, SHAPES["train_4k"], None)
+    assert b2["src_embeds"].shape == (256, 4096, enc.d_model)
+    assert b2["tokens"].shape == (256, 4096)
+
+
+def test_params_specs_abstract():
+    model = Model(get_config("olmoe-1b-7b"))
+    specs = sp.params_specs(model, None)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    total = sum(np.prod(l.shape) for l in leaves)
+    assert total == model.n_params()
+
+
+def test_cache_specs_shapes():
+    model = Model(get_config("deepseek-v2-236b"))
+    cache = sp.cache_specs(model, SHAPES["decode_32k"], None)
+    m = model.cfg.mla
+    # MLA compressed cache: (L-1 scanned, B, S, kv_lora)
+    assert cache["layers"]["c_kv"].shape == (59, 128, 32768, m.kv_lora)
+    assert cache["lead"][0]["c_kv"].shape == (128, 32768, m.kv_lora)
+    assert cache["pos"].shape == ()
+
+
+def test_cells_skip_rule():
+    for arch in ARCH_IDS:
+        shapes = dict((s.name, run) for s, run in cells(arch))
+        assert shapes["train_4k"] and shapes["decode_32k"]
+        expect_long = arch in ("hymba-1.5b", "h2o-danube-1.8b", "rwkv6-7b")
+        assert shapes["long_500k"] == expect_long, arch
+
+
+def test_roofline_analyze():
+    rec = {
+        "arch": "x", "shape": "train_4k", "n_devices": 256,
+        "jaxpr_flops": 256 * 197e12,          # exactly 1 s compute
+        "jaxpr_bytes": 1.0, "jaxpr_bytes_fused": 256 * 819e9 * 0.5,
+        "model_flops": 256 * 197e12 * 0.7,
+        "collectives": {"total_bytes": 50e9 * 0.25},
+        "memory": {"argument_bytes": 1e9, "temp_bytes": 2e9},
+    }
+    row = roofline.analyze(rec)
+    assert row["t_compute_s"] == pytest.approx(1.0)
+    assert row["t_memory_s"] == pytest.approx(0.5)
+    assert row["t_collective_s"] == pytest.approx(0.25)
+    assert row["dominant"] == "compute"
+    assert row["useful_ratio"] == pytest.approx(0.7)
+    assert row["roofline_frac"] == pytest.approx(0.7)
+
+
+def test_collective_census_trip_expansion():
+    from repro.launch.dryrun import collective_census
+    hlo = """
+%cond_1 (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %g = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%g, %c), direction=LT
+}
+
+%body_1 (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %ar = f32[1024,256] all-reduce(%x), channel_id=1
+  ROOT %t = (s32[]) tuple(%g)
+}
+
+ENTRY %main () -> f32[] {
+  %w = (s32[]) while(%init), condition=%cond_1, body=%body_1
+  %ag = f32[512] all-gather(%y), channel_id=2
+}
+"""
+    census = collective_census(hlo)
+    # all-reduce inside the 7-trip loop: 7 * 1024*256*4 bytes
+    assert census["bytes_by_kind"]["all-reduce"] == 7 * 1024 * 256 * 4
+    assert census["bytes_by_kind"]["all-gather"] == 512 * 4
+
+
+def test_zero1_spec_shards_state():
+    mesh = types.SimpleNamespace(shape={"data": 4, "model": 2})
+    from repro.models.common import ParamDef
+    # this test only exercises the resolution logic; build via _resolve
+    from repro.distributed import sharding as shd
+    pd = ParamDef((8, 64, 32), ("layers", "embed", "mlp"))
+    base = shd._resolve(mesh, shd.SERVE_PARAM_RULES, pd.axes, pd.shape)
+    # TP-only: embed not sharded, mlp on model
+    assert base == P(None, None, "model")
+
+
+def test_launch_entrypoints_import():
+    import repro.launch.train
+    import repro.launch.serve
+    import repro.launch.dryrun
+    assert callable(repro.launch.train.main)
+    assert callable(repro.launch.serve.main)
+    pol = repro.launch.train.parse_policy("scope:**/mlp=e5m7")
+    assert pol.rules[0].fmt.man_bits == 7
+    pol2 = repro.launch.train.parse_policy("32_to_5_14")
+    assert pol2.rules[0].from_width == 32

@@ -1,0 +1,100 @@
+"""Mem-mode: shadow correctness, flag heatmaps, the Table-2 exclusion flow."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import (
+    memtrace, truncate, TruncationPolicy, E5M2, FP16, scope,
+)
+
+
+def model(w, x):
+    with scope("attn"):
+        h = jnp.tanh(x @ w)
+    with scope("mlp"):
+        h = jax.nn.relu(h @ w.T) @ w
+    with scope("norm"):
+        h = h / (jnp.sqrt(jnp.mean(h * h, -1, keepdims=True)) + 1e-5)
+    return jnp.sum(h * h)
+
+
+def data():
+    r = np.random.RandomState(0)
+    return (jnp.asarray(r.randn(8, 8), jnp.float32),
+            jnp.asarray(r.randn(4, 8), jnp.float32))
+
+
+def test_outputs_match_opmode():
+    """mem-mode low lane == op-mode output (same truncation points)."""
+    w, x = data()
+    pol = TruncationPolicy.everywhere(E5M2)
+    out_op = truncate(model, pol)(w, x)
+    out_mem, _ = memtrace(model, pol, 1e-3)(w, x)
+    assert float(out_op) == float(out_mem)
+
+
+def test_shadow_is_full_precision():
+    """With an identity policy nothing is flagged."""
+    w, x = data()
+    pol = TruncationPolicy.everywhere("fp32")
+    out, report = memtrace(model, pol, 1e-6)(w, x)
+    assert float(out) == float(model(w, x))
+    assert int(jnp.sum(report.flags)) == 0
+
+
+def test_flags_grow_with_coarser_format():
+    w, x = data()
+    _, rep_fine = memtrace(model, TruncationPolicy.everywhere(FP16), 1e-3)(w, x)
+    _, rep_coarse = memtrace(model, TruncationPolicy.everywhere(E5M2), 1e-3)(w, x)
+    assert int(jnp.sum(rep_coarse.flags)) > int(jnp.sum(rep_fine.flags))
+
+
+def test_heatmap_locates_scopes():
+    w, x = data()
+    _, rep = memtrace(model, TruncationPolicy.everywhere(E5M2), 1e-2)(w, x)
+    locs = [loc for loc, n, _ in rep.top(100) if n > 0]
+    assert any("attn" in l for l in locs)
+    assert any("mlp" in l for l in locs)
+
+
+def test_exclusion_workflow_table2():
+    """Paper §6.3: exclude the worst-flagged module, re-run, error drops."""
+    w, x = data()
+    pol = TruncationPolicy.everywhere(E5M2)
+    ref = float(model(w, x))
+    out0, rep0 = memtrace(model, pol, 1e-2)(w, x)
+    worst = rep0.top(1)[0][0].split(" ")[0].split("/")[0]
+    out1, rep1 = memtrace(model, pol.excluding(worst), 1e-2)(w, x)
+    err0 = abs(float(out0) - ref)
+    err1 = abs(float(out1) - ref)
+    # excluding the most-flagged scope must not make things worse
+    assert err1 <= err0 * 1.5
+    assert int(jnp.sum(rep1.flags)) <= int(jnp.sum(rep0.flags))
+
+
+def test_memmode_through_scan():
+    def f(x):
+        def body(c, _):
+            return jnp.sin(c * 1.01), c
+        y, ys = lax.scan(body, x, None, length=4)
+        return jnp.sum(y) + jnp.sum(ys)
+    x = jnp.asarray(np.random.RandomState(2).randn(8), jnp.float32)
+    pol = TruncationPolicy.everywhere(E5M2)
+    out, rep = memtrace(f, pol, 1e-3)(x)
+    assert np.isfinite(float(out))
+    assert int(jnp.sum(rep.op_counts)) > 0
+    # op counts accumulate across the 4 scan iterations
+    assert int(jnp.max(rep.op_counts)) >= 4 * 8
+
+
+def test_memmode_jits():
+    w, x = data()
+    pol = TruncationPolicy.everywhere(E5M2)
+    fn = jax.jit(memtrace(model, pol, 1e-3))
+    out1, rep1 = fn(w, x)
+    out2, rep2 = fn(w, x)
+    assert float(out1) == float(out2)
+    np.testing.assert_array_equal(np.asarray(rep1.flags),
+                                  np.asarray(rep2.flags))

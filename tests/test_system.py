@@ -1,0 +1,144 @@
+"""End-to-end system tests: the paper's methodology exercised against the
+LM stack (hypothesis -> truncate -> profile -> conclude), plus the serving
+engine and the speedup model."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import (
+    truncate, memtrace, profile_counts, TruncationPolicy, TruncationRule,
+    estimate_speedup, fpu_area_model,
+)
+from repro.models import Model
+from repro.serving.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ArchConfig(name="sys", family="dense", n_layers=3, d_model=48,
+                     n_heads=4, n_kv_heads=2, head_dim=12, d_ff=96, vocab=64,
+                     dtype="float32", remat=False, scan_layers=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    toks = r.randint(0, cfg.vocab, (4, 33))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+    return cfg, model, params, batch
+
+
+def _logit_l1(model, params, batch, policy):
+    full = model.forward(params, batch)
+    tr = truncate(model.forward, policy, impl="ref")(params, batch)
+    return float(jnp.mean(jnp.abs(full - tr)))
+
+
+def test_error_vs_mantissa_monotone(setup):
+    """Fig. 7 panel-1 analogue: global truncation error decreases with
+    mantissa width (on average over the sweep)."""
+    cfg, model, params, batch = setup
+    errs = [
+        _logit_l1(model, params, batch,
+                  TruncationPolicy.everywhere(f"e8m{m}"))
+        for m in (2, 6, 10, 23)
+    ]
+    assert errs[0] > errs[2] > errs[3]
+    # identity format: only interpreter-rebind 1-ulp noise remains
+    assert errs[3] < 1e-6
+
+
+def test_layer_cutoff_reduces_error(setup):
+    """AMR M-l analogue: fencing the last layers (the 'finest blocks' —
+    closest to the loss) reduces error vs truncating everything."""
+    cfg, model, params, batch = setup
+    pol_all = TruncationPolicy.everywhere("e8m4")
+    err_all = _logit_l1(model, params, batch, pol_all)
+    pol_m1 = pol_all.excluding("layer2", "final_norm", "logits")
+    err_m1 = _logit_l1(model, params, batch, pol_m1)
+    assert err_m1 < err_all
+
+
+def test_module_truncation_norms_are_fragile(setup):
+    """Cellular/EOS analogue: truncating the (cheap) norms harms more than
+    truncating the (expensive) MLPs, per unit of truncated work."""
+    cfg, model, params, batch = setup
+    err_mlp = _logit_l1(model, params, batch,
+                        TruncationPolicy.scoped("**/mlp", "e8m2"))
+    err_norm = _logit_l1(model, params, batch,
+                         TruncationPolicy.scoped("**/pre_norm", "e8m2"))
+    cnt_mlp = profile_counts(model.forward,
+                             TruncationPolicy.scoped("**/mlp", "e8m2"))(
+        params, batch)
+    cnt_norm = profile_counts(model.forward,
+                              TruncationPolicy.scoped("**/pre_norm", "e8m2"))(
+        params, batch)
+    frac_mlp = cnt_mlp.truncated_fraction
+    frac_norm = cnt_norm.truncated_fraction
+    assert frac_mlp > frac_norm  # mlp is most of the flops
+    # error per truncated-flop-fraction is worse for norms
+    assert err_norm / max(frac_norm, 1e-9) > err_mlp / max(frac_mlp, 1e-9)
+
+
+def test_memmode_flags_consistent_with_error(setup):
+    cfg, model, params, batch = setup
+    pol = TruncationPolicy.everywhere("e8m3")
+
+    def fwd_sum(p, b):
+        return jnp.sum(model.forward(p, b))
+    out, rep = memtrace(fwd_sum, pol, 1e-3, impl="ref")(params, batch)
+    assert int(jnp.sum(rep.flags)) > 0
+    top = rep.top(3)
+    assert top[0][1] >= top[-1][1]
+
+
+def test_speedup_model_paper_numbers():
+    """Table 4 / Fig. 8 sanity: with the paper's Sod M-0 profile (86.3%
+    truncated ops) the FPNew-density model lands near the paper's reported
+    compute-bound predictions (~3.7x for half, ~2.2x for single)."""
+    sod = {"full": 13.7}
+    sp16 = fpu_area_model({**sod, "fp16": 86.3})["fp16"]
+    assert 2.8 < sp16 < 4.2, sp16
+    sp32 = fpu_area_model({**sod, "fp32": 86.3})["fp32"]
+    assert 1.4 < sp32 < 2.6, sp32
+    # pure truncation is the upper bound; partial truncation speeds up less
+    pure = fpu_area_model({"full": 0.0, "fp16": 100.0})["fp16"]
+    assert sp16 < pure
+
+
+def test_estimate_speedup_bounds(setup):
+    cfg, model, params, batch = setup
+    pol = TruncationPolicy.everywhere("e5m2")
+    rep = profile_counts(model.loss, pol)(params, batch)
+    est = estimate_speedup(rep)
+    assert est.compute_bound >= 1.0
+    assert est.memory_bound >= 1.0
+    assert est.bound in ("compute", "memory")
+
+
+def test_serving_engine(setup):
+    cfg, model, params, batch = setup
+    eng = Engine(model, params, batch_size=2, max_seq_len=32)
+    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=4)
+    eng.submit(1, np.array([4, 5, 6]), max_new_tokens=4)
+    eng.submit(2, np.array([7, 8, 9]), max_new_tokens=2)
+    done = eng.run()
+    assert set(done) == {0, 1, 2}
+    assert len(done[0].out_tokens) == 4
+    assert len(done[2].out_tokens) == 2
+    assert all(0 <= t < cfg.vocab for t in done[0].out_tokens)
+
+
+def test_truncated_serving(setup):
+    """Serving under a truncation policy (deployment-style mixed precision)."""
+    cfg, model, params, batch = setup
+    pol = TruncationPolicy.scoped("**/mlp", "fp16")
+    full_logits, _ = jax.jit(model.decode_step)(
+        params, model.init_cache(2, 8), jnp.zeros((2,), jnp.int32))
+    tr_step = truncate(model.decode_step, pol, impl="ref")
+    tr_logits, _ = tr_step(params, model.init_cache(2, 8),
+                           jnp.zeros((2,), jnp.int32))
+    assert tr_logits.shape == full_logits.shape
+    assert bool(jnp.all(jnp.isfinite(tr_logits)))
