@@ -10,6 +10,7 @@ def main() -> None:
     from benchmarks import (
         fig7_truncation_sweep, table2_memmode, table3_overhead,
         fig8_speedup_model, kernels_micro, perf_fp8_dot, roofline_table,
+        search_convergence,
     )
     benches = [
         ("fig7_truncation_sweep", fig7_truncation_sweep.run),
@@ -19,6 +20,7 @@ def main() -> None:
         ("kernels_micro", kernels_micro.run),
         ("perf_fp8_dot", perf_fp8_dot.run),
         ("roofline_table", roofline_table.run),
+        ("search_convergence", search_convergence.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     for name, fn in benches:

@@ -1,0 +1,73 @@
+"""Search-convergence benchmark: trace-cache hit rate + autosearch cost.
+
+Two numbers the tentpole promises, measured on the ~10M-param bench model:
+
+  1. trace caching — first call of a cached ``truncate`` wrapper (trace +
+     jaxpr walk + compile) vs its steady-state call (executable-cache hit).
+     The ratio is the payoff of caching the transformed computation.
+  2. search convergence — evaluations and wall time ``autosearch`` needs to
+     land a per-scope assignment under the error threshold.
+
+    PYTHONPATH=src python -m benchmarks.search_convergence
+"""
+import time
+
+import jax
+
+from benchmarks.common import bench_model, bench_batch, csv_row, timeit
+from repro import search
+from repro.core import truncate, TruncationPolicy, profile_counts, \
+    estimate_speedup
+
+
+def bench_trace_cache():
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    pol = TruncationPolicy.everywhere("e5m7")
+    tr = truncate(model.loss, pol)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(tr(params, batch))
+    first = time.perf_counter() - t0
+    steady, _ = timeit(tr, params, batch, warmup=1, iters=5)
+
+    csv_row("truncate_first_call", first * 1e6, f"traces={tr.n_traces}")
+    csv_row("truncate_cached_call", steady * 1e6,
+            f"speedup={first / steady:.1f}x")
+    assert tr.n_traces == 1, "cached wrapper must not re-trace"
+    return first / steady
+
+
+def bench_autosearch(budget: int = 48, threshold: float = 5e-3):
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+
+    t0 = time.perf_counter()
+    result = search.autosearch(
+        model.loss, (params, batch), search.loss_degradation, budget,
+        threshold=threshold)
+    wall = time.perf_counter() - t0
+
+    csv_row("autosearch_wall_us", wall * 1e6,
+            f"evals={result.evals_used}/{budget}"
+            f";converged={result.converged}")
+    rep = profile_counts(model.loss, result.policy())(params, batch)
+    est = estimate_speedup(rep)
+    csv_row("autosearch_truncated_flops_pct",
+            rep.truncated_fraction * 100,
+            f"predicted_speedup={est.predicted:.2f}x")
+    print("\n" + result.table())
+    return result
+
+
+def run():
+    print("name,us_per_call,derived")
+    ratio = bench_trace_cache()
+    result = bench_autosearch()
+    print(f"\ntrace-cache speedup {ratio:.1f}x; "
+          f"search used {result.evals_used} evals "
+          f"({'converged' if result.converged else 'NOT converged'})")
+
+
+if __name__ == "__main__":
+    run()

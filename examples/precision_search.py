@@ -1,10 +1,11 @@
 """Automated precision search: the paper's manual hypothesis loop, closed.
 
-Greedy per-scope mantissa descent: starting from fp32 everywhere, walk the
-module scopes; for each, lower the mantissa while the validation-loss
-degradation stays inside the error budget, then keep the lowest admissible
-width. Produces a mixed-precision policy + its predicted speedup — i.e. the
-Fig. 7 "cost-benefit analysis" done automatically.
+Built on ``repro.search.autosearch``: trace the loss once, discover the
+``named_scope`` regions, bisect each region's mantissa width in isolation,
+then compose the joint policy and greedily exclude fragile regions until the
+loss degradation fits the budget (paper §6.3's "exclude Recon, re-run").
+Ends with the Fig. 7-style cost-benefit readout: the per-scope format table,
+the truncated-FLOP census, and the predicted speedup.
 
     PYTHONPATH=src python examples/precision_search.py
 """
@@ -13,16 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core import (
-    truncate, profile_counts, TruncationPolicy, TruncationRule, FPFormat,
-    estimate_speedup,
-)
+from repro.core import truncate, profile_counts, estimate_speedup
 from repro.models import Model
+from repro import search
 
 ERROR_BUDGET = 5e-3       # max acceptable relative loss degradation
-SCOPES = ["**/attn", "**/mlp", "**/pre_norm", "**/post_norm",
-          "final_norm", "logits"]
-WIDTHS = [23, 16, 10, 7, 5, 3, 2]
+EVAL_BUDGET = 48          # candidate evaluations the search may spend
 
 cfg = get_config("h2o-danube-1.8b", "smoke")
 model = Model(cfg)
@@ -32,30 +29,21 @@ toks = r.randint(0, cfg.vocab, (8, 65))
 batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
          "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
 full = float(model.loss(params, batch))
-print(f"baseline loss {full:.6f}; budget {ERROR_BUDGET:.0e} relative\n")
+print(f"baseline loss {full:.6f}; budget {ERROR_BUDGET:.0e} relative, "
+      f"{EVAL_BUDGET} evaluations\n")
 
-chosen = {}
-for sc in SCOPES:
-    best = 23
-    for m in WIDTHS:
-        rules = tuple(TruncationRule(fmt=FPFormat(8, mm), scope=s)
-                      for s, mm in {**chosen, sc: m}.items())
-        pol = TruncationPolicy(rules=rules)
-        lossy = float(truncate(model.loss, pol)(params, batch))
-        rel = abs(lossy - full) / max(abs(full), 1e-9)
-        if rel <= ERROR_BUDGET:
-            best = m
-        else:
-            break
-    chosen[sc] = best
-    print(f"  {sc:15s} -> e8m{best}")
+result = search.autosearch(
+    model.loss, (params, batch),
+    search.loss_degradation, EVAL_BUDGET,
+    threshold=ERROR_BUDGET, verbose=True)
 
-rules = tuple(TruncationRule(fmt=FPFormat(8, m), scope=s)
-              for s, m in chosen.items())
-policy = TruncationPolicy(rules=rules)
+print("\nper-scope assignment (paper heatmap analogue):")
+print(result.table())
+
+policy = result.policy()
 lossy = float(truncate(model.loss, policy)(params, batch))
 rep = profile_counts(model.loss, policy)(params, batch)
 print(f"\nfinal policy loss {lossy:.6f} (rel err "
-      f"{abs(lossy-full)/abs(full):.2e})")
+      f"{abs(lossy - full) / abs(full):.2e})")
 print(rep.summary())
 print("predicted speedup:", estimate_speedup(rep))

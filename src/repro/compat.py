@@ -1,0 +1,47 @@
+"""Version-compatibility shims for the range of JAX versions we support.
+
+The repo targets the container's pinned jaxlib but the public API it uses
+has moved between releases (``jax.sharding.AxisType`` and the explicit-mesh
+types landed after 0.4.x; ``user_frame`` changed its argument type;
+``jax.enable_x64`` graduated from ``jax.experimental``). Everything that is
+version-sensitive funnels through here so the rest of the codebase reads as
+if it were written against one API.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with ``axis_types=Auto`` on versions that have
+    explicit sharding types, and without the kwarg on versions that don't
+    (everything was implicitly Auto there)."""
+    kwargs = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axis_names)
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def user_frame(source_info):
+    """Most-user-relevant stack frame of an eqn's source_info, across the
+    signature change (SourceInfo-taking vs Traceback-taking)."""
+    util = jax._src.source_info_util
+    try:
+        return util.user_frame(source_info)
+    except (AttributeError, TypeError):
+        return util.user_frame(source_info.traceback)
+
+
+def enable_x64():
+    """Context manager enabling f64, wherever this release keeps it."""
+    ctx = getattr(jax, "enable_x64", None)
+    if ctx is not None:
+        try:
+            return ctx(True)
+        except TypeError:
+            pass
+    from jax.experimental import enable_x64 as _ex64
+    return _ex64()

@@ -6,13 +6,23 @@
     lossy_step = raptor.truncate(train_step, policy)       # op-mode
     out, report = raptor.memtrace(step, policy, 1e-3)(...) # mem-mode
     counts = raptor.profile_counts(step, policy)(...)      # speedup inputs
+
+Op-mode and mem-mode wrappers cache the transformed, ``jax.jit``-closed
+computation keyed on (input pytree structure, input avals, policy identity):
+the jaxpr is walked and the policy matched once per distinct signature, and
+every further call is a compiled-executable dispatch. This is what makes the
+automated precision search (``repro.search``) affordable — each candidate
+policy costs one trace, each repeat evaluation costs ~a kernel launch.
 """
 from __future__ import annotations
 
 import functools
 from typing import Callable
 
+import numpy as np
+
 import jax
+from jax._src import core as jcore
 
 from repro.core import interpreter, memmode, counters
 from repro.core.formats import FPFormat, parse_format  # re-export
@@ -27,41 +37,91 @@ def _flatten_like_make_jaxpr(args, kwargs):
     return jax.tree_util.tree_leaves((args, kwargs))
 
 
-def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto"
-             ) -> Callable:
+def _leaf_key(x):
+    """Cache-key component for one input leaf: shape + dtype + weak_type
+    (python scalars and weak-typed arrays promote differently than strong
+    arrays of the same dtype, so they must not share a cache entry)."""
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return (tuple(x.shape), str(x.dtype),
+                bool(getattr(x, "weak_type", False)))
+    return (np.shape(x), str(np.result_type(x)), True)
+
+
+def _has_tracer(xs) -> bool:
+    return any(isinstance(x, jcore.Tracer) for x in xs)
+
+
+def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
+                      key_suffix: tuple, cache: bool) -> Callable:
+    """Shared trace-cache machinery for ``truncate``/``memtrace``.
+
+    ``build(closed, out_tree)`` -> jit-closed callable taking flat leaves;
+    ``fallback(closed, out_tree, leaves)`` -> direct (uncached) evaluation,
+    used under an outer trace where caching a jaxpr would leak tracers.
+    """
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        use_cache = cache and not _has_tracer(leaves)
+        key = None
+        if use_cache:
+            key = (in_tree, tuple(_leaf_key(l) for l in leaves)) + key_suffix
+            entry = wrapped._cache.get(key)
+            if entry is not None:
+                return entry(leaves)
+        wrapped.n_traces += 1
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        if not use_cache or _has_tracer(closed.consts):
+            return fallback(closed, out_tree, leaves)
+        entry = build(closed, out_tree)
+        wrapped._cache[key] = entry
+        return entry(leaves)
+
+    wrapped._cache = {}
+    wrapped.n_traces = 0          # times the jaxpr walk actually ran
+    wrapped.cache_clear = wrapped._cache.clear
+    wrapped.cache_size = lambda: len(wrapped._cache)
+    return wrapped
+
+
+def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto",
+             cache: bool = True) -> Callable:
     """Return ``fn`` with op-mode truncation applied under ``policy``.
 
     The wrapper is an ordinary traceable JAX function: compose freely with
     ``jax.jit``, ``jax.grad`` (grad-then-truncate covers the backward pass),
-    ``shard_map``/``pjit`` meshes, etc.
-    """
-    @functools.wraps(fn)
-    def wrapped(*args, **kwargs):
-        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
-        flat = _flatten_like_make_jaxpr(args, kwargs)
+    ``shard_map``/``pjit`` meshes, etc. Under an outer trace it falls back to
+    direct interpretation; called concretely it reuses a jit-closed transform
+    per input signature (``wrapper.n_traces`` counts actual jaxpr walks)."""
+    def build(closed, out_tree):
+        return interpreter.quantized_callable(closed, out_tree, policy, impl)
+
+    def fallback(closed, out_tree, leaves):
         outs = interpreter.eval_quantized(
-            closed.jaxpr, closed.consts, flat, policy, impl)
-        out_tree = jax.tree_util.tree_structure(out_shape)
+            closed.jaxpr, closed.consts, leaves, policy, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
-    return wrapped
+    return _cached_transform(fn, build, fallback,
+                             (policy.cache_key(), impl), cache)
 
 
 def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
-             *, impl: str = "auto") -> Callable:
+             *, impl: str = "auto", cache: bool = True) -> Callable:
     """mem-mode: returns ``(outputs, RaptorReport)`` where the report carries
     per-source-location flag counts and max relative deviations of the
     truncated values against full-precision shadow values."""
-    @functools.wraps(fn)
-    def wrapped(*args, **kwargs):
-        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
-        flat = _flatten_like_make_jaxpr(args, kwargs)
+    def build(closed, out_tree):
+        return memmode.shadowed_callable(closed, out_tree, policy, threshold,
+                                         impl)
+
+    def fallback(closed, out_tree, leaves):
         outs, report = memmode.eval_shadowed(
-            closed.jaxpr, closed.consts, flat, policy, threshold, impl)
-        out_tree = jax.tree_util.tree_structure(out_shape)
+            closed.jaxpr, closed.consts, leaves, policy, threshold, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
-    return wrapped
+    return _cached_transform(fn, build, fallback,
+                             (policy.cache_key(), threshold, impl), cache)
 
 
 def profile_counts(fn: Callable, policy: TruncationPolicy) -> Callable:

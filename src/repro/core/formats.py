@@ -75,6 +75,15 @@ class FPFormat:
         sat = "s" if self.saturate else ""
         return self.name or f"e{self.exp_bits}m{self.man_bits}{sat}"
 
+    @property
+    def cache_key(self) -> str:
+        """Unambiguous identity string: unlike ``key`` it always spells out
+        the overflow convention, so two formats that round differently can
+        never alias in a trace cache."""
+        return (f"e{self.exp_bits}m{self.man_bits}"
+                f"{'s' if self.saturate else ''}"
+                f"{'' if self.ieee_inf else 'fn'}")
+
     def __str__(self) -> str:
         return self.key
 
@@ -89,6 +98,13 @@ TF32 = FPFormat(8, 10, name="tf32")
 BF16 = FPFormat(8, 7, name="bf16")
 FP16 = FPFormat(5, 10, name="fp16")
 E5M2 = FPFormat(5, 2, name="e5m2")
+# OCP 8-bit formats. Both e4m3 entries use the "fn" exponent layout (no inf,
+# top exponent reclaimed, max finite = 448 = ml_dtypes.float8_e4m3fn.max);
+# they differ ONLY in overflow handling:
+#   E4M3FN — overflow -> NaN, exactly the ml_dtypes/OCP cast convention
+#            (cross-checked bit-for-bit in tests/test_formats_fp8.py)
+#   E4M3   — overflow saturates to +/-448, the training-friendly convention
+#            hardware quantizers use (e.g. TE's saturating cast)
 E4M3 = FPFormat(4, 3, saturate=True, ieee_inf=False, name="e4m3")
 E4M3FN = FPFormat(4, 3, saturate=False, ieee_inf=False, name="e4m3fn")
 

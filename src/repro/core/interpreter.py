@@ -49,6 +49,22 @@ def _maybe_quantize(val, rule: TruncationRule, impl: str):
     return q
 
 
+def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
+                       policy: TruncationPolicy, impl: str = "auto"):
+    """jit-close the transformed computation once. The jaxpr walk (and its
+    per-equation policy matching) happens a single time, at trace; every
+    subsequent call with the same avals hits XLA's executable cache, so
+    repeated evaluations — the precision-search inner loop — pay only the
+    kernel launch, not a re-interpretation."""
+    @jax.jit
+    def run(flat):
+        outs = eval_quantized(closed.jaxpr, closed.consts, list(flat),
+                              policy, impl)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    return run
+
+
 def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
                    policy: TruncationPolicy, impl: str = "auto",
                    prefix: str = "") -> List[Any]:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax._src import core as jcore
 
+from repro import compat
 from repro.core.policy import TruncationPolicy, join_stack
 from repro.kernels.quantize_em.ops import quantize
 
@@ -92,6 +93,21 @@ def _accumulate(stats, idx: int, low, shadow, threshold: float):
     return (flags, max_rel, op_counts)
 
 
+def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
+                      policy: TruncationPolicy, threshold: float,
+                      impl: str = "auto"):
+    """jit-close the paired (truncated, shadow) evaluation once — the
+    mem-mode analogue of ``interpreter.quantized_callable``. The RaptorReport
+    rides out of jit as a pytree (static location table, array stats)."""
+    @jax.jit
+    def run(flat):
+        outs, report = eval_shadowed(closed.jaxpr, closed.consts, list(flat),
+                                     policy, threshold, impl)
+        return jax.tree_util.tree_unflatten(out_tree, outs), report
+
+    return run
+
+
 def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
                   policy: TruncationPolicy, threshold: float, impl: str = "auto",
                   ) -> Tuple[List[Any], RaptorReport]:
@@ -112,7 +128,7 @@ def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any]
 
 def _loc_desc(eqn, prefix: str) -> str:
     ns = str(eqn.source_info.name_stack)
-    frame = jax._src.source_info_util.user_frame(eqn.source_info.traceback)
+    frame = compat.user_frame(eqn.source_info)
     src = f"{frame.file_name.split('/')[-1]}:{frame.start_line}" if frame else "?"
     scope = f"{prefix}/{ns}" if prefix and ns else (prefix or ns or "<root>")
     return f"{scope} {eqn.primitive.name} @ {src}"
@@ -243,9 +259,72 @@ def _mem_scan(eqn, lows, shadows, policy, threshold, impl, rec, stats,
     return list(lo_fin) + list(lo_ys), list(sh_fin) + list(sh_ys), stats
 
 
+def _mem_while(eqn, lows, shadows, policy, threshold, impl, rec, stats,
+               prefix=""):
+    p = eqn.params
+    cond_closed = _as_closed(p["cond_jaxpr"])
+    body_closed = _as_closed(p["body_jaxpr"])
+    cn, bn = p["cond_nconsts"], p["body_nconsts"]
+    lo_cc, sh_cc = lows[:cn], shadows[:cn]
+    lo_bc, sh_bc = lows[cn:cn + bn], shadows[cn:cn + bn]
+    lo_car, sh_car = tuple(lows[cn + bn:]), tuple(shadows[cn + bn:])
+
+    def cond_fn(carry):
+        lo_c, sh_c, st = carry
+        # the truncated program decides control flow; the shadow lane rides
+        # along the same path (RAPTOR runs ONE binary — shadows are values,
+        # not an alternate execution). Stats from cond-body ops are dropped:
+        # a predicate can't update the carry.
+        lo, _, _ = _eval(cond_closed.jaxpr, cond_closed.consts,
+                         list(lo_cc) + list(lo_c), list(sh_cc) + list(sh_c),
+                         policy, threshold, impl, rec, st, prefix)
+        return lo[0]
+
+    def body_fn(carry):
+        lo_c, sh_c, st = carry
+        lo, sh, st2 = _eval(body_closed.jaxpr, body_closed.consts,
+                            list(lo_bc) + list(lo_c),
+                            list(sh_bc) + list(sh_c),
+                            policy, threshold, impl, rec, st, prefix)
+        return tuple(lo), tuple(sh), st2
+
+    lo_fin, sh_fin, stats = lax.while_loop(
+        cond_fn, body_fn, (lo_car, sh_car, stats))
+    return list(lo_fin), list(sh_fin), stats
+
+
+def _mem_cond(eqn, lows, shadows, policy, threshold, impl, rec, stats,
+              prefix=""):
+    idx, *lo_ops = lows
+    _, *sh_ops = shadows
+
+    def make_branch(br):
+        closed = _as_closed(br)
+
+        def branch(ops):
+            lo_in, sh_in, st = ops
+            lo, sh, st2 = _eval(closed.jaxpr, closed.consts, list(lo_in),
+                                list(sh_in), policy, threshold, impl, rec,
+                                st, prefix)
+            return tuple(lo), tuple(sh), st2
+
+        return branch
+
+    lo_outs, sh_outs, stats = lax.switch(
+        idx, [make_branch(b) for b in eqn.params["branches"]],
+        (tuple(lo_ops), tuple(sh_ops), stats))
+    return list(lo_outs), list(sh_outs), stats
+
+
+def _as_closed(jx):
+    return jx if isinstance(jx, jcore.ClosedJaxpr) else jcore.ClosedJaxpr(jx, ())
+
+
 _MEM_HOPS = {
     "jit": _mem_call, "pjit": _mem_call, "closed_call": _mem_call,
     "remat2": _mem_call, "checkpoint": _mem_call,
     "custom_jvp_call": _mem_call, "custom_vjp_call": _mem_call,
     "scan": _mem_scan,
+    "while": _mem_while,
+    "cond": _mem_cond,
 }

@@ -151,6 +151,16 @@ class TruncationRule:
         object.__setattr__(self, "fmt", parse_format(self.fmt))
         object.__setattr__(self, "_rx", compile_scope(self.scope))
 
+    def cache_key(self) -> tuple:
+        """Stable hashable identity for trace caches. Mask functions are
+        identified by (__name__, id): two policies sharing the same mask
+        object alias, distinct closures never do."""
+        mask_id = (None if self.mask is None
+                   else (getattr(self.mask, "__name__", "<mask>"),
+                         id(self.mask)))
+        return (self.fmt.cache_key, self.scope, self.from_width, self.ops,
+                self.exclude_ops, self.quantize_dot_inputs, mask_id)
+
     def matches(self, name_stack: str, prim_name: str, out_dtype) -> bool:
         if prim_name in STRUCTURAL_PRIMS:
             return False
@@ -181,6 +191,9 @@ class TruncationPolicy:
         object.__setattr__(self, "excludes", tuple(self.excludes))
         object.__setattr__(
             self, "_ex_rx", tuple(compile_scope(p) for p in self.excludes))
+
+    def cache_key(self) -> tuple:
+        return (tuple(r.cache_key() for r in self.rules), self.excludes)
 
     def rule_for(self, name_stack: str, prim_name: str, out_dtype
                  ) -> Optional[TruncationRule]:

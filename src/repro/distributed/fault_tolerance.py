@@ -33,6 +33,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
+
 
 def best_mesh_shape(n_devices: int, model_parallel: int) -> Tuple[int, int]:
     """Largest (data, model) grid for the currently visible devices."""
@@ -45,9 +47,7 @@ def best_mesh_shape(n_devices: int, model_parallel: int) -> Tuple[int, int]:
 def remesh(model_parallel: int = 16, axis_names=("data", "model")) -> Mesh:
     devs = jax.devices()
     data, model = best_mesh_shape(len(devs), model_parallel)
-    return jax.make_mesh(
-        (data, model), axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return compat.make_mesh((data, model), axis_names)
 
 
 @dataclasses.dataclass

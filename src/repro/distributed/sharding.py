@@ -128,6 +128,8 @@ def _resolve(mesh: Mesh, rules: dict, logical: Tuple[Optional[str], ...],
         if axis is not None:
             for a in (axis if isinstance(axis, tuple) else (axis,)):
                 used.add(a)
+        if isinstance(axis, tuple) and len(axis) == 1:
+            axis = axis[0]  # P(('x',)) != P('x') on older jax
         spec.append(axis)
     while spec and spec[-1] is None:
         spec.pop()

@@ -38,10 +38,12 @@ def quantize(x, fmt, *, impl: str = "auto"):
     if dt is None or not jnp.issubdtype(dt, jnp.floating):
         return x
 
-    # identity: target grid at least as fine as the storage grid
-    storage_bits = jnp.finfo(dt).nmant
-    storage_exp = {jnp.dtype(jnp.float64): 11, jnp.dtype(jnp.float32): 8,
-                   jnp.dtype(jnp.bfloat16): 8, jnp.dtype(jnp.float16): 5}[dt]
+    # identity: target grid at least as fine as the storage grid. Derived
+    # from finfo so any float dtype works (float8_*, future formats) instead
+    # of KeyError-ing outside a hardcoded table.
+    finfo = jnp.finfo(dt)
+    storage_bits = finfo.nmant
+    storage_exp = finfo.bits - 1 - finfo.nmant
     if (fmt.man_bits >= storage_bits and fmt.exp_bits >= storage_exp
             and not fmt.saturate and fmt.ieee_inf):
         return x

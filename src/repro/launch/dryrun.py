@@ -29,6 +29,7 @@ from repro.configs.base import (
     ArchConfig, InputShape, SHAPES, ARCH_IDS, get_config, cells,
 )
 from repro.core import counters
+from repro.search.scopes import discover_scopes
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch import specs as sp
@@ -185,12 +186,18 @@ def lower_cell(arch_id: str, shape: InputShape, multi_pod: bool):
 def jaxpr_counts(fn, args):
     """Global FLOP/byte totals with scan trip counts folded in (XLA's
     cost_analysis counts while-loop bodies once — see DESIGN.md). Returns
-    (flops, bytes_unfused, bytes_fused)."""
+    (flops, bytes_unfused, bytes_fused, scope_census): the census is the
+    precision-search work-list for this cell — the ``named_scope`` frontier
+    ``repro.search.autosearch`` would assign formats to, with FLOP shares."""
     closed = jax.make_jaxpr(fn)(*args)
     rep = counters.count_jaxpr(closed.jaxpr, policy=None)
     rep_f = counters.count_jaxpr(closed.jaxpr, policy=None, fused=True)
+    census = [
+        {"scope": s.path, "flops": s.flops, "n_eqns": s.n_eqns,
+         "fraction": round(s.fraction, 4)}
+        for s in discover_scopes(closed, min_fraction=0.02, max_scopes=16)]
     return (rep.total_flops, sum(rep.bytes_by_fmt.values()),
-            sum(rep_f.bytes_by_fmt.values()))
+            sum(rep_f.bytes_by_fmt.values()), census)
 
 
 def model_flops(model: Model, shape: InputShape) -> float:
@@ -217,10 +224,12 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        jflops, jbytes, jbytes_fused = jaxpr_counts(fn, args)
+        jflops, jbytes, jbytes_fused, scope_census = jaxpr_counts(fn, args)
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # pre-0.5 jax: list of one dict
+            cost = cost[0] if cost else {}
         census = collective_census(compiled.as_text())
         rec.update(
             ok=True,
@@ -231,6 +240,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
             jaxpr_flops=jflops,
             jaxpr_bytes=jbytes,
             jaxpr_bytes_fused=jbytes_fused,
+            precision_search_scopes=scope_census,
             model_flops=model_flops(model, shape),
             memory={
                 "argument_bytes": mem.argument_size_in_bytes,

@@ -1,0 +1,15 @@
+# Automated mixed-precision search over named scopes (paper §6.3 closed
+# loop) — scope discovery, mantissa bisection, greedy-exclusion refinement.
+from repro.search.driver import (
+    autosearch, SearchResult, ScopeAssignment, DEFAULT_WIDTHS,
+)
+from repro.search.scopes import discover_scopes, scope_tree, ScopeInfo
+from repro.search.metrics import (
+    rel_error, mean_rel_error, loss_degradation, default_metric,
+)
+
+__all__ = [
+    "autosearch", "SearchResult", "ScopeAssignment", "DEFAULT_WIDTHS",
+    "discover_scopes", "scope_tree", "ScopeInfo",
+    "rel_error", "mean_rel_error", "loss_degradation", "default_metric",
+]

@@ -1,0 +1,251 @@
+"""Automated mixed-precision search (the paper's §6.3 loop, closed).
+
+RAPTOR's workflow is manual: truncate a scope, look at the figure of merit,
+exclude the scopes that break, re-run. ``autosearch`` automates it:
+
+  1. **Trace once.** The profiled function is traced to a jaxpr a single
+     time; every candidate policy is evaluated by re-walking that jaxpr
+     under ``jax.jit`` (see ``interpreter.quantized_callable``), so each
+     candidate costs one compile and each repeat costs a kernel launch.
+  2. **Scope discovery.** ``named_scope`` subtrees are enumerated and cut
+     into a disjoint frontier of regions ordered by FLOPs.
+  3. **Per-scope bisection.** For each region *in isolation*, bisect the
+     mantissa-width ladder for the narrowest format whose error metric
+     stays under the threshold — the region's measured sensitivity, the
+     quantitative form of the paper's per-module truncation experiments.
+  4. **Greedy-exclusion refinement.** If the joint policy misses the
+     threshold, rank regions by mem-mode flag counts (the paper's heatmap)
+     and exclude the most fragile one; repeat until the metric fits or the
+     evaluation budget runs out.
+
+Every candidate evaluation is counted against ``budget``; the search
+degrades gracefully — regions it never reached simply stay full precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import interpreter, memmode
+from repro.core.formats import FPFormat
+from repro.core.policy import TruncationPolicy, TruncationRule, normalize_stack
+from repro.search import metrics as _metrics
+from repro.search.scopes import ScopeInfo, discover_scopes
+
+# mantissa-width ladder, finest first; 23 at e8 is fp32 = identity
+DEFAULT_WIDTHS: Tuple[int, ...] = (23, 15, 10, 7, 5, 3, 2)
+
+
+@dataclasses.dataclass
+class ScopeAssignment:
+    scope: ScopeInfo
+    man_bits: int                  # assigned mantissa width
+    error_at_accept: float         # metric when this width was accepted
+    excluded: bool = False         # knocked back to full by refinement
+
+    def fmt(self, exp_bits: int) -> Optional[FPFormat]:
+        """The format this assignment truncates to; None = full precision."""
+        if self.excluded or self.man_bits >= 23:
+            return None
+        return FPFormat(exp_bits, self.man_bits)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Per-scope format assignment + the audit trail of the search."""
+
+    assignments: Dict[str, ScopeAssignment]
+    exp_bits: int
+    threshold: float
+    budget: int
+    evals_used: int
+    final_error: float
+    converged: bool
+    history: List[Tuple[str, float]]  # (event, metric value)
+
+    def policy(self) -> TruncationPolicy:
+        rules = tuple(
+            TruncationRule(fmt=a.fmt(self.exp_bits), scope=path)
+            for path, a in self.assignments.items()
+            if a.fmt(self.exp_bits) is not None)
+        return TruncationPolicy(rules=rules)
+
+    def table(self) -> str:
+        """Per-scope format table — the textual analogue of the paper's
+        per-region heatmap."""
+        lines = [f"  {'scope':<32} {'flops%':>7} {'format':>8} "
+                 f"{'err@accept':>11}  status"]
+        for path, a in self.assignments.items():
+            fmt = a.fmt(self.exp_bits)
+            status = ("excluded" if a.excluded
+                      else ("full" if fmt is None else "truncated"))
+            lines.append(
+                f"  {path:<32} {a.scope.fraction * 100:>6.1f}% "
+                f"{(fmt.key if fmt else 'fp32'):>8} "
+                f"{a.error_at_accept:>11.3e}  {status}")
+        lines.append(
+            f"  -- metric {self.final_error:.3e} (threshold "
+            f"{self.threshold:.1e}) in {self.evals_used}/{self.budget} evals; "
+            f"{'converged' if self.converged else 'NOT converged'}")
+        return "\n".join(lines)
+
+
+def autosearch(fn: Callable, args: Sequence = (),
+               metric: Optional[Callable] = None, budget: int = 64, *,
+               kwargs: Optional[dict] = None, threshold: float = 1e-3,
+               widths: Sequence[int] = DEFAULT_WIDTHS, exp_bits: int = 8,
+               scopes: Optional[Sequence[ScopeInfo]] = None,
+               min_fraction: float = 0.01, max_scopes: Optional[int] = None,
+               memflag_threshold: Optional[float] = None,
+               impl: str = "auto", refine: bool = True,
+               verbose: bool = False) -> SearchResult:
+    """Search a per-scope mixed-precision assignment for ``fn(*args)``.
+
+    Returns a :class:`SearchResult`; ``result.policy()`` is directly usable
+    with ``api.truncate``. ``metric(ref_out, cand_out) -> float`` defaults to
+    the max relative output deviation; ``budget`` caps the total number of
+    candidate evaluations (op-mode and mem-mode alike).
+    """
+    metric = metric or _metrics.default_metric
+    kwargs = dict(kwargs or {})
+    # index 0 of the ladder must always be full precision: scopes the search
+    # never validates (budget exhaustion, all-rejected bisections) are
+    # assigned widths[0] with error 0.0, which is only honest for identity.
+    widths = tuple(sorted({int(w) for w in widths}, reverse=True))
+    if not widths or widths[0] < 23:
+        widths = (23,) + widths
+
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+    leaves = jax.tree_util.tree_leaves((tuple(args), kwargs))
+
+    identity = TruncationPolicy(rules=())
+    ref_out = interpreter.quantized_callable(closed, out_tree, identity,
+                                             impl)(leaves)
+
+    if scopes is None:
+        scopes = discover_scopes(closed, min_fraction=min_fraction,
+                                 max_scopes=max_scopes)
+    scopes = list(scopes)
+
+    evals = 0
+    history: List[Tuple[str, float]] = []
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[autosearch] {msg}", flush=True)
+
+    def evaluate(policy: TruncationPolicy, tag: str) -> float:
+        nonlocal evals
+        evals += 1
+        run = interpreter.quantized_callable(closed, out_tree, policy, impl)
+        err = metric(ref_out, run(leaves))
+        history.append((tag, err))
+        return err
+
+    def policy_of(assign: Dict[str, ScopeAssignment],
+                  extra: Optional[Tuple[str, int]] = None
+                  ) -> TruncationPolicy:
+        rules = []
+        pending = dict(assign)
+        if extra is not None:
+            path, m = extra
+            pending[path] = ScopeAssignment(
+                scope=next(s for s in scopes if s.path == path),
+                man_bits=m, error_at_accept=0.0)
+        for path, a in pending.items():
+            f = a.fmt(exp_bits)
+            if f is not None:
+                rules.append(TruncationRule(fmt=f, scope=path))
+        return TruncationPolicy(rules=tuple(rules))
+
+    # ---- phase 1: solo per-scope mantissa bisection, widest work first -----
+    # Each candidate truncates ONE region; the accepted width is that
+    # region's measured sensitivity. Composition errors are phase 2's job.
+    # One evaluation stays reserved for the joint check so evals_used can
+    # never exceed the budget.
+    reserve = 1
+    assignments: Dict[str, ScopeAssignment] = {}
+    for si in scopes:
+        if evals + reserve >= budget:
+            assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
+            continue
+        lo, hi = 0, len(widths) - 1       # index into widths; lo admissible
+        err_lo = 0.0
+        # probe the coarsest width first: one eval often settles the scope
+        err = evaluate(policy_of({}, (si.path, widths[hi])),
+                       f"bisect:{si.path}:m{widths[hi]}")
+        if err <= threshold:
+            lo, err_lo = hi, err
+        else:
+            while hi - lo > 1 and evals + reserve < budget:
+                mid = (lo + hi) // 2
+                err = evaluate(policy_of({}, (si.path, widths[mid])),
+                               f"bisect:{si.path}:m{widths[mid]}")
+                if err <= threshold:
+                    lo, err_lo = mid, err
+                else:
+                    hi = mid
+        assignments[si.path] = ScopeAssignment(si, widths[lo], err_lo)
+        log(f"{si.path} ({si.fraction * 100:.1f}% flops) -> "
+            f"m{widths[lo]} (err {err_lo:.3e}, {evals} evals)")
+
+    # ---- phase 2: joint check + greedy-exclusion refinement ----------------
+    if policy_of(assignments).rules:
+        final_err = evaluate(policy_of(assignments), "joint")
+    else:
+        final_err = 0.0  # nothing truncated -> trivially exact, no eval owed
+        history.append(("joint", 0.0))
+    log(f"joint policy err {final_err:.3e}")
+
+    while (refine and final_err > threshold and evals + 2 <= budget
+           and any(not a.excluded and a.fmt(exp_bits) is not None
+                   for a in assignments.values())):
+        victim = _most_fragile_scope(
+            closed, out_tree, leaves, policy_of(assignments), assignments,
+            memflag_threshold if memflag_threshold is not None else threshold,
+            impl)
+        evals += 1  # the mem-mode ranking pass is a paid evaluation
+        if victim is None:
+            # heatmap flagged nothing attributable; fall back to the
+            # truncated scope carrying the most work
+            cands = [(p, a) for p, a in assignments.items()
+                     if not a.excluded and a.fmt(exp_bits) is not None]
+            victim = max(cands, key=lambda pa: pa[1].scope.flops)[0]
+        assignments[victim].excluded = True
+        log(f"exclude {victim} (paper §6.3), re-run")
+        final_err = evaluate(policy_of(assignments), f"exclude:{victim}")
+        log(f"-> err {final_err:.3e}")
+
+    return SearchResult(
+        assignments=assignments, exp_bits=exp_bits, threshold=threshold,
+        budget=budget, evals_used=evals, final_error=final_err,
+        converged=final_err <= threshold, history=history)
+
+
+def _most_fragile_scope(closed, out_tree, leaves, policy, assignments,
+                        flag_threshold: float, impl: str) -> Optional[str]:
+    """Rank assigned scopes by mem-mode flag counts under the joint policy
+    and return the worst non-excluded one (the paper's heatmap -> exclusion
+    step). Returns None when nothing attributable was flagged."""
+    run = memmode.shadowed_callable(closed, out_tree, policy,
+                                    flag_threshold, impl)
+    _, report = run(leaves)
+    flags = jax.device_get(report.flags)
+
+    per_scope: Dict[str, int] = {}
+    for i, desc in enumerate(report.locations):
+        loc_scope = normalize_stack(desc.split(" ")[0])
+        for path, a in assignments.items():
+            if a.excluded or a.man_bits >= 23:
+                continue
+            if loc_scope == path or loc_scope.startswith(path + "/"):
+                per_scope[path] = per_scope.get(path, 0) + int(flags[i])
+                break
+    live = {p: n for p, n in per_scope.items()
+            if n > 0 and not assignments[p].excluded}
+    if not live:
+        return None
+    return max(live, key=live.get)

@@ -1,0 +1,70 @@
+"""Pluggable error metrics for the precision search.
+
+A metric is any ``metric(ref_out, cand_out) -> float`` where smaller is
+better and the search threshold bounds it. ``ref_out``/``cand_out`` are the
+full pytree outputs of the profiled function (full-precision vs candidate
+policy).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+_EPS = 1e-12
+
+
+def _leaves(tree):
+    return [np.asarray(jax.device_get(x))
+            for x in jax.tree_util.tree_leaves(tree)]
+
+
+def rel_error(ref_out, cand_out) -> float:
+    """Max relative deviation over all output leaves and elements.
+
+    NaN/Inf appearing in the candidate where the reference is finite counts
+    as infinite error — a policy that overflows must never be admissible."""
+    worst = 0.0
+    for r, c in zip(_leaves(ref_out), _leaves(cand_out)):
+        r = r.astype(np.float64, copy=False)
+        c = c.astype(np.float64, copy=False)
+        ok = np.isfinite(r)
+        if not np.all(np.isfinite(c[ok] if r.shape else c)):
+            return float("inf")
+        if r.size == 0:
+            continue
+        d = np.abs(c - r) / (np.abs(r) + _EPS)
+        d = d[ok] if r.shape else d
+        if d.size:
+            worst = max(worst, float(np.max(d)))
+    return worst
+
+
+def loss_degradation(ref_out, cand_out) -> float:
+    """|Δloss| / |loss| for scalar(-first) outputs — the metric of the
+    paper's application studies ('accept if the figure of merit moves less
+    than the budget')."""
+    r = _leaves(ref_out)[0].astype(np.float64).ravel()
+    c = _leaves(cand_out)[0].astype(np.float64).ravel()
+    if not np.all(np.isfinite(c)):
+        return float("inf")
+    return float(np.abs(c[0] - r[0]) / max(np.abs(r[0]), _EPS))
+
+
+def mean_rel_error(ref_out, cand_out) -> float:
+    """Mean (not max) relative deviation — a softer target for noisy
+    workloads where a handful of tiny denominators shouldn't veto."""
+    num = 0.0
+    den = 0
+    for r, c in zip(_leaves(ref_out), _leaves(cand_out)):
+        r = r.astype(np.float64, copy=False)
+        c = c.astype(np.float64, copy=False)
+        if not np.all(np.isfinite(c[np.isfinite(r)] if r.shape else c)):
+            return float("inf")
+        d = np.abs(c - r) / (np.abs(r) + _EPS)
+        num += float(np.sum(d))
+        den += d.size
+    return num / max(den, 1)
+
+
+default_metric = rel_error

@@ -1,0 +1,151 @@
+"""Scope discovery: enumerate ``named_scope`` subtrees of a traced jaxpr.
+
+The search driver needs a work-list of regions to try truncating. RAPTOR
+gets its region list from the symbol table (every function is a scope); our
+analogue is the ``jax.named_scope`` name stack that models already use to
+label every module ("layers/attn/qkv", ...). We walk the jaxpr — recursing
+through higher-order primitives exactly like the counters do — and build a
+scope tree annotated with FLOP counts, then cut a *frontier* through it:
+the deepest scopes that each still carry a meaningful fraction of the total
+work. Those frontier scopes are the search variables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax._src import core as jcore
+
+from repro.core.counters import _eqn_flops
+from repro.core.policy import join_stack, normalize_stack
+
+_SUB_JAXPRS = {
+    "jit": ("jaxpr",), "pjit": ("jaxpr",), "closed_call": ("call_jaxpr",),
+    "core_call": ("call_jaxpr",), "remat2": ("jaxpr",),
+    "checkpoint": ("jaxpr",),
+    "custom_jvp_call": ("call_jaxpr",), "custom_vjp_call": ("call_jaxpr",),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeInfo:
+    """One named-scope subtree: its normalized path, the float FLOPs bound
+    to it (including all children), and how many float-producing equations
+    it contains."""
+
+    path: str
+    flops: float
+    n_eqns: int
+    fraction: float  # of total float FLOPs in the program
+
+
+def _walk(jaxpr: jcore.Jaxpr, prefix: str, mult: float,
+          flops: Dict[str, float], eqns: Dict[str, int]) -> None:
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        sub_prefix = join_stack(prefix, str(eqn.source_info.name_stack))
+        if prim in _SUB_JAXPRS:
+            for key in _SUB_JAXPRS[prim]:
+                inner = eqn.params[key]
+                inner = inner.jaxpr if isinstance(inner, jcore.ClosedJaxpr) else inner
+                _walk(inner, sub_prefix, mult, flops, eqns)
+            continue
+        if prim == "scan":
+            _walk(eqn.params["jaxpr"].jaxpr, sub_prefix,
+                  mult * eqn.params["length"], flops, eqns)
+            continue
+        if prim == "while":
+            _walk(eqn.params["body_jaxpr"].jaxpr, sub_prefix, mult, flops, eqns)
+            continue
+        if prim == "cond":
+            # branches are mutually exclusive at runtime: credit only the
+            # largest one (same upper-bound convention as counters)
+            best = None
+            for br in eqn.params["branches"]:
+                bf: Dict[str, float] = {}
+                be: Dict[str, int] = {}
+                _walk(br.jaxpr, sub_prefix, mult, bf, be)
+                if best is None or bf.get("", 0.0) > best[0].get("", 0.0):
+                    best = (bf, be)
+            if best is not None:
+                for k, v in best[0].items():
+                    flops[k] = flops.get(k, 0.0) + v
+                for k, v in best[1].items():
+                    eqns[k] = eqns.get(k, 0) + v
+            continue
+
+        # only float-producing eqns are candidates for truncation; integer
+        # work must not drag a scope into the search space
+        if not any(hasattr(v.aval, "dtype")
+                   and jnp.issubdtype(v.aval.dtype, jnp.floating)
+                   for v in eqn.outvars):
+            continue
+        f = _eqn_flops(eqn) * mult
+        if f <= 0.0:
+            continue
+        path = normalize_stack(sub_prefix)
+        # credit the eqn to every enclosing scope prefix
+        segs = [s for s in path.split("/") if s]
+        acc = ""
+        for seg in segs:
+            acc = f"{acc}/{seg}" if acc else seg
+            flops[acc] = flops.get(acc, 0.0) + f
+            eqns[acc] = eqns.get(acc, 0) + 1
+        flops[""] = flops.get("", 0.0) + f
+        eqns[""] = eqns.get("", 0) + 1
+
+
+def scope_tree(closed: jcore.ClosedJaxpr) -> Dict[str, float]:
+    """All normalized scope paths with their (multiplicity-weighted) float
+    FLOPs. The empty path holds the program total."""
+    flops: Dict[str, float] = {}
+    eqns: Dict[str, int] = {}
+    _walk(closed.jaxpr, "", 1.0, flops, eqns)
+    return flops
+
+
+def discover_scopes(closed: jcore.ClosedJaxpr, *,
+                    min_fraction: float = 0.01,
+                    max_scopes: Optional[int] = None) -> List[ScopeInfo]:
+    """Cut the search frontier through the scope tree.
+
+    A scope is *refined* into its children when at least one child carries
+    ``min_fraction`` of the total work; otherwise it is kept whole. The
+    result is a list of disjoint scopes ordered by descending FLOPs — the
+    per-scope variables the precision search will assign formats to.
+    """
+    flops: Dict[str, float] = {}
+    eqns: Dict[str, int] = {}
+    _walk(closed.jaxpr, "", 1.0, flops, eqns)
+    total = flops.get("", 0.0)
+    if total <= 0.0:
+        return []
+
+    children: Dict[str, List[str]] = {}
+    for path in flops:
+        if not path:
+            continue
+        parent = path.rsplit("/", 1)[0] if "/" in path else ""
+        children.setdefault(parent, []).append(path)
+
+    frontier: List[str] = []
+
+    def cut(path: str) -> None:
+        kids = children.get(path, [])
+        big = [k for k in kids if flops[k] / total >= min_fraction]
+        if big:
+            for k in big:
+                cut(k)
+            # siblings below the threshold stay unassigned (full precision)
+            return
+        if path:
+            frontier.append(path)
+
+    cut("")
+    out = [ScopeInfo(p, flops[p], eqns[p], flops[p] / total)
+           for p in frontier]
+    out.sort(key=lambda s: -s.flops)
+    if max_scopes is not None:
+        out = out[:max_scopes]
+    return out

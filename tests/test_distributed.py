@@ -16,8 +16,8 @@ from repro.distributed import sharding as shd
 
 
 def mk_mesh(shape, names):
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    from repro.compat import make_mesh
+    return make_mesh(shape, names)
 
 
 def test_resolve_basic():
@@ -69,8 +69,8 @@ SUBPROC = textwrap.dedent("""
     from repro.train.trainer import TrainConfig, make_train_step, init_opt_state
     from repro.optim.adamw import AdamWConfig
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = get_config("olmoe-1b-7b", "smoke").replace(dtype="float32")
     model = Model(cfg)
     out = {}
@@ -109,6 +109,7 @@ SUBPROC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multidevice_train_and_decode():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

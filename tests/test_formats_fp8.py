@@ -1,0 +1,85 @@
+"""E4M3/E4M3FN registry audit against ml_dtypes/OCP conventions.
+
+OCP e4m3fn has no inf (the top exponent is reclaimed for normals, all-ones
+mantissa at the top exponent is NaN): max finite 448, smallest subnormal
+2^-9. Our two registry entries share that grid and differ only in overflow
+handling — E4M3FN maps overflow to NaN like an ml_dtypes cast, E4M3
+saturates to +/-448. These tests pin the grid bit-for-bit to the reference
+implementation.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+ml_dtypes = pytest.importorskip("ml_dtypes")
+
+from repro.core.formats import E4M3, E4M3FN, E5M2
+from repro.kernels.quantize_em.ops import quantize
+
+
+def _all_fp8_values(dtype):
+    bits = np.arange(256, dtype=np.uint8)
+    return bits.view(dtype).astype(np.float32)
+
+
+def test_registry_constants_match_ml_dtypes():
+    fi = ml_dtypes.finfo(ml_dtypes.float8_e4m3fn)
+    for fmt in (E4M3, E4M3FN):
+        assert fmt.max_finite == float(fi.max)
+        assert fmt.min_normal == float(fi.smallest_normal)
+        assert fmt.min_subnormal == float(fi.smallest_subnormal)
+        assert fmt.bits == 8
+    fi2 = ml_dtypes.finfo(ml_dtypes.float8_e5m2)
+    assert E5M2.max_finite == float(fi2.max)
+    assert E5M2.min_subnormal == float(fi2.smallest_subnormal)
+
+
+@pytest.mark.parametrize("fmt", [E4M3, E4M3FN], ids=["e4m3", "e4m3fn"])
+def test_grid_fixed_points(fmt):
+    """Every finite ml_dtypes e4m3fn value must be a fixed point of our
+    quantizer — the representable grids are identical."""
+    vals = _all_fp8_values(ml_dtypes.float8_e4m3fn)
+    finite = vals[np.isfinite(vals)]
+    q = np.asarray(quantize(jnp.asarray(finite), fmt, impl="ref"))
+    np.testing.assert_array_equal(q, finite)
+
+
+def test_e4m3fn_cast_agreement():
+    """quantize(x, E4M3FN) == f32 -> float8_e4m3fn -> f32 for finite x,
+    including the rounding boundaries around overflow (464 is the midpoint
+    between 448 and the absent 512: at-or-below rounds down, above is NaN)."""
+    rng = np.random.RandomState(0)
+    x = np.concatenate([
+        rng.randn(2048).astype(np.float32)
+        * 10 ** rng.uniform(-6, 4, 2048).astype(np.float32),
+        np.array([448.0, 449.0, 463.9, 464.0, 464.0001, 465.0, 1000.0,
+                  -448.0, -464.0, -465.0, 2.0 ** -9, 2.0 ** -10,
+                  1.5 * 2.0 ** -9, 0.0, -0.0], np.float32)])
+    ours = np.asarray(quantize(jnp.asarray(x), E4M3FN, impl="ref"))
+    with np.errstate(over="ignore"):
+        theirs = x.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+    same = ((ours == theirs) | (np.isnan(ours) & np.isnan(theirs))
+            | ((ours == 0) & (theirs == 0)))
+    bad = np.where(~same)[0]
+    assert len(bad) == 0, [(x[i], ours[i], theirs[i]) for i in bad[:5]]
+
+
+def test_e4m3_saturates_where_fn_nans():
+    x = jnp.asarray([465.0, 1000.0, -2048.0, np.inf, -np.inf], jnp.float32)
+    sat = np.asarray(quantize(x, E4M3, impl="ref"))
+    fn = np.asarray(quantize(x, E4M3FN, impl="ref"))
+    # documented convention: inf passes through both (profiling wants the
+    # overflow signal); finite overflow differs
+    np.testing.assert_array_equal(sat[:3], [448.0, 448.0, -448.0])
+    assert np.all(np.isnan(fn[:3]))
+    assert np.isinf(sat[3]) and np.isinf(fn[3])
+
+
+def test_e4m3_subnormal_grid():
+    """Gradual underflow onto the 2^-9 fixed-point grid, RNE."""
+    step = 2.0 ** -9
+    x = jnp.asarray([0.5 * step, 1.5 * step, 2.5 * step, 0.49 * step,
+                     3.1 * step], jnp.float32)
+    q = np.asarray(quantize(x, E4M3FN, impl="ref"))
+    np.testing.assert_allclose(q, [0.0, 2 * step, 2 * step, 0.0, 3 * step])

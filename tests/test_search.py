@@ -1,0 +1,173 @@
+"""Automated precision search: scope discovery, bisection, budget
+discipline, the greedy-exclusion refinement loop, and the policy round-trip.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import search
+from repro.core import truncate, TruncationPolicy, scope
+
+
+def _toy(w1, w2, x):
+    with scope("attn"):
+        h = jnp.tanh(x @ w1)
+    with scope("mlp"):
+        h = jax.nn.relu(h @ w2) @ w2.T
+    with scope("head"):
+        return jnp.mean(h * h)
+
+
+def _toy_args(seed=0):
+    r = np.random.RandomState(seed)
+    return (jnp.asarray(r.randn(32, 64) / 8, jnp.float32),
+            jnp.asarray(r.randn(64, 64) / 8, jnp.float32),
+            jnp.asarray(r.randn(16, 32), jnp.float32))
+
+
+def test_discover_scopes_frontier():
+    args = _toy_args()
+    closed = jax.make_jaxpr(_toy)(*args)
+    scopes = search.discover_scopes(closed)
+    paths = [s.path for s in scopes]
+    assert "mlp" in paths and "attn" in paths
+    # disjoint frontier, ordered by work, fractions sane
+    assert len(paths) == len(set(paths))
+    fracs = [s.fraction for s in scopes]
+    assert fracs == sorted(fracs, reverse=True)
+    assert all(0.0 < f <= 1.0 for f in fracs)
+    assert sum(fracs) <= 1.0 + 1e-9
+
+
+def test_discover_scopes_counts_scan_trips():
+    def f(x):
+        with scope("loop"):
+            def body(c, _):
+                return c @ c, None
+            y, _ = lax.scan(body, x, None, length=5)
+        return y
+
+    x = jnp.eye(8, dtype=jnp.float32)
+    closed = jax.make_jaxpr(f)(x)
+    (si,) = [s for s in search.discover_scopes(closed) if s.path == "loop"]
+    assert si.flops == pytest.approx(5 * 2 * 8 ** 3)
+
+
+def test_autosearch_converges_within_budget():
+    args = _toy_args()
+    res = search.autosearch(_toy, args, search.rel_error, 32,
+                            threshold=1e-2)
+    assert res.converged
+    assert res.evals_used <= 32
+    assert res.final_error <= 1e-2
+    # something actually got truncated
+    assert len(res.policy().rules) >= 1
+    # the table renders every discovered scope
+    table = res.table()
+    for path in res.assignments:
+        assert path in table
+
+
+def test_autosearch_policy_roundtrip():
+    """Applying result.policy() via the public truncate API reproduces the
+    search's final metric."""
+    args = _toy_args()
+    res = search.autosearch(_toy, args, search.rel_error, 32, threshold=1e-2)
+    ref = float(_toy(*args))
+    lossy = float(truncate(_toy, res.policy())(*args))
+    got = abs(lossy - ref) / max(abs(ref), 1e-12)
+    assert got == pytest.approx(res.final_error, rel=1e-3, abs=1e-9)
+
+
+def test_autosearch_budget_one_degrades_gracefully():
+    args = _toy_args()
+    res = search.autosearch(_toy, args, search.rel_error, 1, threshold=1e-2)
+    assert res.evals_used <= 1
+    # nothing searched -> everything stays full precision, which trivially
+    # meets the threshold
+    assert res.policy().rules == ()
+    assert res.converged
+
+
+def test_autosearch_tight_threshold_prefers_fine_formats():
+    args = _toy_args()
+    loose = search.autosearch(_toy, args, search.rel_error, 32,
+                              threshold=1e-1)
+    tight = search.autosearch(_toy, args, search.rel_error, 32,
+                              threshold=1e-6)
+    for path, a in tight.assignments.items():
+        if path in loose.assignments:
+            assert a.man_bits >= loose.assignments[path].man_bits
+
+
+def test_exclusion_refinement_loop():
+    """Force the paper's §6.3 dynamic: every scope passes its solo check but
+    the composed policy misses the threshold, so the search must exclude
+    fragile scopes until the joint metric fits."""
+    args = _toy_args(seed=3)  # seed where composition amplifies the error
+    widths = (23, 2)          # solo checks only ever try e8m2
+
+    # self-calibrate: measure solo and joint errors at e8m2
+    ref = float(_toy(*args))
+
+    def err_of(*scopes_):
+        pol = TruncationPolicy(rules=tuple(
+            search.driver.TruncationRule(
+                fmt=search.driver.FPFormat(8, 2), scope=s)
+            for s in scopes_))
+        lossy = float(truncate(_toy, pol)(*args))
+        return abs(lossy - ref) / abs(ref)
+
+    solo = {s: err_of(s) for s in ("attn", "mlp", "head")}
+    joint = err_of("attn", "mlp", "head")
+    if joint <= max(solo.values()):
+        pytest.skip("errors cancelled for this seed; no composition gap")
+    thr = (max(solo.values()) + joint) / 2.0
+
+    res = search.autosearch(_toy, args, search.rel_error, 32,
+                            threshold=thr, widths=widths,
+                            min_fraction=1e-4)  # keep 'head' in the frontier
+    assert res.converged
+    assert any(a.excluded for a in res.assignments.values()), res.table()
+    # excluded scopes fall out of the policy
+    pol_scopes = {r.scope for r in res.policy().rules}
+    for path, a in res.assignments.items():
+        if a.excluded:
+            assert path not in pol_scopes
+
+
+@pytest.mark.slow
+def test_autosearch_quickstart_model():
+    """Acceptance: autosearch on the quickstart model converges to a
+    per-scope assignment meeting the error threshold within the budget."""
+    from repro.configs.base import get_config
+    from repro.models import Model
+
+    cfg = get_config("olmoe-1b-7b", "smoke")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    toks = r.randint(0, cfg.vocab, (4, 33))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+
+    budget = 48
+    res = search.autosearch(model.loss, (params, batch),
+                            search.loss_degradation, budget, threshold=5e-3)
+    assert res.converged, res.table()
+    assert res.evals_used <= budget
+    assert res.final_error <= 5e-3
+    assert len(res.policy().rules) >= 1  # something got truncated
+    full = float(model.loss(params, batch))
+    lossy = float(truncate(model.loss, res.policy())(params, batch))
+    assert abs(lossy - full) / abs(full) <= 5e-3
+
+
+def test_metrics_flag_nonfinite():
+    assert search.rel_error(jnp.float32(1.0), jnp.float32(jnp.nan)) == float("inf")
+    assert search.loss_degradation((jnp.float32(2.0),),
+                                   (jnp.float32(jnp.inf),)) == float("inf")
+    assert search.rel_error(jnp.float32(2.0), jnp.float32(2.0)) == 0.0

@@ -36,6 +36,7 @@ def _logit_l1(model, params, batch, policy):
     return float(jnp.mean(jnp.abs(full - tr)))
 
 
+@pytest.mark.slow
 def test_error_vs_mantissa_monotone(setup):
     """Fig. 7 panel-1 analogue: global truncation error decreases with
     mantissa width (on average over the sweep)."""
@@ -50,6 +51,7 @@ def test_error_vs_mantissa_monotone(setup):
     assert errs[3] < 1e-6
 
 
+@pytest.mark.slow
 def test_layer_cutoff_reduces_error(setup):
     """AMR M-l analogue: fencing the last layers (the 'finest blocks' —
     closest to the loss) reduces error vs truncating everything."""
@@ -61,6 +63,7 @@ def test_layer_cutoff_reduces_error(setup):
     assert err_m1 < err_all
 
 
+@pytest.mark.slow
 def test_module_truncation_norms_are_fragile(setup):
     """Cellular/EOS analogue: truncating the (cheap) norms harms more than
     truncating the (expensive) MLPs, per unit of truncated work."""
@@ -82,6 +85,7 @@ def test_module_truncation_norms_are_fragile(setup):
     assert err_norm / max(frac_norm, 1e-9) > err_mlp / max(frac_mlp, 1e-9)
 
 
+@pytest.mark.slow
 def test_memmode_flags_consistent_with_error(setup):
     cfg, model, params, batch = setup
     pol = TruncationPolicy.everywhere("e8m3")

@@ -42,6 +42,7 @@ def test_loss_decreases():
     assert np.isfinite(losses).all()
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """accum=4 on a 4x batch == accum=1 average-of-microbatch gradients."""
     model = tiny_model()
@@ -63,6 +64,7 @@ def test_grad_accum_equivalence():
     assert max(jax.tree_util.tree_leaves(d)) < 1e-5
 
 
+@pytest.mark.slow
 def test_truncated_training_runs_and_hurts_at_4bit():
     """Paper Fig. 7 in miniature: a 4-bit-mantissa training step degrades
     the loss trajectory vs fp32; an e8m16 step tracks it closely."""
