@@ -40,5 +40,35 @@ def timeit(fn, *args, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters, out
 
 
+# rows recorded by csv_row since the last reset_results(); benchmarks/run.py
+# snapshots these into machine-readable BENCH_<name>.json artifacts so the
+# perf trajectory is tracked across PRs
+RESULTS = []
+
+
+def reset_results():
+    RESULTS.clear()
+
+
+def _parse_derived(derived: str):
+    """Best-effort 'k=v;k=v' -> dict (numbers coerced); raw string otherwise."""
+    out = {}
+    for part in str(derived).split(";"):
+        k, sep, v = part.partition("=")
+        if not sep or not k.strip():
+            return str(derived)
+        v = v.strip()
+        try:
+            out[k.strip()] = int(v)
+        except ValueError:
+            try:
+                out[k.strip()] = float(v)
+            except ValueError:
+                out[k.strip()] = v
+    return out
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
+    RESULTS.append({"name": name, "us_per_call": float(us_per_call),
+                    "derived": _parse_derived(derived)})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,14 +1,44 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV blocks (plus per-benchmark headers). ``python -m benchmarks.run``.
+# CSV blocks (plus per-benchmark headers) and writes a machine-readable
+# ``BENCH_<name>.json`` artifact per benchmark (us_per_call + derived
+# metrics + wall time) into $BENCH_OUT (default: cwd) so the perf
+# trajectory is tracked across PRs. ``python -m benchmarks.run``.
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import time
 
 
+def _write_artifact(out_dir: str, name: str, wall_s: float, rows) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    payload = {
+        "benchmark": name,
+        "wall_s": round(wall_s, 3),
+        "rows": rows,
+        "meta": {
+            "python": platform.python_version(),
+            "platform": platform.platform(),
+        },
+    }
+    try:
+        import jax
+        payload["meta"]["jax"] = jax.__version__
+        payload["meta"]["backend"] = jax.default_backend()
+    except Exception:
+        pass
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main() -> None:
     from benchmarks import (
-        fig7_truncation_sweep, table2_memmode, table3_overhead,
+        common, fig7_truncation_sweep, table2_memmode, table3_overhead,
         fig8_speedup_model, kernels_micro, perf_fp8_dot, roofline_table,
         search_convergence,
     )
@@ -23,13 +53,17 @@ def main() -> None:
         ("search_convergence", search_convergence.run),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    out_dir = os.environ.get("BENCH_OUT", ".")
     for name, fn in benches:
         if only and only not in name:
             continue
         print(f"\n===== {name} =====", flush=True)
+        common.reset_results()
         t0 = time.time()
         fn()
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        wall = time.time() - t0
+        path = _write_artifact(out_dir, name, wall, list(common.RESULTS))
+        print(f"# {name} done in {wall:.1f}s -> {path}", flush=True)
 
 
 if __name__ == '__main__':

@@ -1,12 +1,19 @@
-"""Search-convergence benchmark: trace-cache hit rate + autosearch cost.
+"""Search-convergence benchmark: trace-cache hit rate, zero-recompile policy
+sweeps, and autosearch cost.
 
-Two numbers the tentpole promises, measured on the ~10M-param bench model:
+Three numbers the tentpoles promise, measured on the ~10M-param bench model:
 
   1. trace caching — first call of a cached ``truncate`` wrapper (trace +
      jaxpr walk + compile) vs its steady-state call (executable-cache hit).
      The ratio is the payoff of caching the transformed computation.
-  2. search convergence — evaluations and wall time ``autosearch`` needs to
-     land a per-scope assignment under the error threshold.
+  2. policy sweep — evaluating a ladder of candidate policies through the
+     runtime-parameterized ``truncate_sweep`` executable (one compile for
+     ALL candidates) vs the per-policy ``truncate`` path (one trace + one
+     compile per candidate). The per-candidate ratio is the payoff of
+     making formats runtime values.
+  3. search convergence — evaluations, wall time, and XLA compilations
+     ``autosearch`` needs to land a per-scope assignment under the error
+     threshold (compiles stay O(1) regardless of budget).
 
     PYTHONPATH=src python -m benchmarks.search_convergence
 """
@@ -16,8 +23,8 @@ import jax
 
 from benchmarks.common import bench_model, bench_batch, csv_row, timeit
 from repro import search
-from repro.core import truncate, TruncationPolicy, profile_counts, \
-    estimate_speedup
+from repro.core import truncate, truncate_sweep, TruncationPolicy, \
+    profile_counts, estimate_speedup
 
 
 def bench_trace_cache():
@@ -38,6 +45,42 @@ def bench_trace_cache():
     return first / steady
 
 
+def bench_policy_sweep(n_candidates: int = 6):
+    """A width-ladder sweep: per-policy retrace/recompile (`truncate`) vs one
+    runtime-parameterized executable (`truncate_sweep`)."""
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    ladder = [TruncationPolicy.everywhere(f"e8m{m}")
+              for m in (15, 10, 7, 5, 3, 2)[:n_candidates]]
+
+    t0 = time.perf_counter()
+    for pol in ladder:
+        jax.block_until_ready(truncate(model.loss, pol)(params, batch))
+    per_policy = (time.perf_counter() - t0) / len(ladder)
+
+    sw = truncate_sweep(model.loss, TruncationPolicy.everywhere("e8m2"))
+    t0 = time.perf_counter()
+    handle = sw(params, batch)
+    jax.block_until_ready(handle.batch(handle.tables(ladder)))
+    sweep_total = time.perf_counter() - t0
+    per_table = sweep_total / len(ladder)
+    # steady state: new candidate ladders reuse the compiled executable
+    t0 = time.perf_counter()
+    jax.block_until_ready(handle.batch(handle.tables(ladder[::-1])))
+    steady_per_table = (time.perf_counter() - t0) / len(ladder)
+
+    csv_row("policy_sweep_per_candidate_static", per_policy * 1e6,
+            f"candidates={len(ladder)};compiles={len(ladder)}")
+    csv_row("policy_sweep_per_candidate_table", per_table * 1e6,
+            f"candidates={len(ladder)};compiles=1"
+            f";speedup={per_policy / per_table:.1f}x"
+            f";sites={handle.num_sites}")
+    csv_row("policy_sweep_per_candidate_steady", steady_per_table * 1e6,
+            f"speedup={per_policy / steady_per_table:.1f}x")
+    assert sw.n_traces == 1, "sweep wrapper must walk the jaxpr once"
+    return per_policy / per_table
+
+
 def bench_autosearch(budget: int = 48, threshold: float = 5e-3):
     cfg, model, params = bench_model()
     batch = bench_batch(cfg)
@@ -50,6 +93,8 @@ def bench_autosearch(budget: int = 48, threshold: float = 5e-3):
 
     csv_row("autosearch_wall_us", wall * 1e6,
             f"evals={result.evals_used}/{budget}"
+            f";compiles={result.n_compiles}"
+            f";sites={result.n_sites}"
             f";converged={result.converged}")
     rep = profile_counts(model.loss, result.policy())(params, batch)
     est = estimate_speedup(rep)
@@ -63,9 +108,12 @@ def bench_autosearch(budget: int = 48, threshold: float = 5e-3):
 def run():
     print("name,us_per_call,derived")
     ratio = bench_trace_cache()
+    sweep_ratio = bench_policy_sweep()
     result = bench_autosearch()
     print(f"\ntrace-cache speedup {ratio:.1f}x; "
-          f"search used {result.evals_used} evals "
+          f"table-sweep speedup {sweep_ratio:.1f}x/candidate; "
+          f"search used {result.evals_used} evals, "
+          f"{result.n_compiles} compile(s) "
           f"({'converged' if result.converged else 'NOT converged'})")
 
 

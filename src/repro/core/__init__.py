@@ -6,7 +6,9 @@ from repro.core.formats import (
 from repro.core.policy import (
     TruncationPolicy, TruncationRule, magnitude_below, magnitude_above,
 )
-from repro.core.api import truncate, memtrace, profile_counts, scope
+from repro.core.api import (
+    truncate, truncate_sweep, SweepHandle, memtrace, profile_counts, scope,
+)
 from repro.core.counters import CountReport
 from repro.core.memmode import RaptorReport
 from repro.core.speedup import estimate_speedup, fpu_area_model, SpeedupEstimate
@@ -15,7 +17,8 @@ __all__ = [
     "FPFormat", "parse_format", "FP64", "FP32", "TF32", "BF16", "FP16",
     "E5M2", "E4M3", "E4M3FN",
     "TruncationPolicy", "TruncationRule", "magnitude_below", "magnitude_above",
-    "truncate", "memtrace", "profile_counts", "scope",
+    "truncate", "truncate_sweep", "SweepHandle", "memtrace",
+    "profile_counts", "scope",
     "CountReport", "RaptorReport",
     "estimate_speedup", "fpu_area_model", "SpeedupEstimate",
 ]

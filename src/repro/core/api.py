@@ -13,6 +13,13 @@ the jaxpr is walked and the policy matched once per distinct signature, and
 every further call is a compiled-executable dispatch. This is what makes the
 automated precision search (``repro.search``) affordable — each candidate
 policy costs one trace, each repeat evaluation costs ~a kernel launch.
+
+``truncate_sweep`` goes one step further: the cache is keyed on quantize
+*sites* rather than policy identity, and the formats become a runtime
+``(num_sites, 4)`` table argument. One compile per input signature serves
+every candidate policy — a new policy is a new table, and a whole ladder of
+policies evaluates in one ``vmap``-batched call. That is the zero-recompile
+policy-sweep path the batched precision search runs on.
 """
 from __future__ import annotations
 
@@ -51,6 +58,14 @@ def _has_tracer(xs) -> bool:
     return any(isinstance(x, jcore.Tracer) for x in xs)
 
 
+def _signature_key(in_tree, leaves, suffix: tuple) -> tuple:
+    """The shared trace-cache key scheme: input pytree structure + per-leaf
+    aval signature + transform identity. Both the policy-keyed caches
+    (truncate/memtrace) and the sites-keyed cache (truncate_sweep) use this
+    so leaf/weak-type semantics can never diverge between them."""
+    return (in_tree, tuple(_leaf_key(l) for l in leaves)) + suffix
+
+
 def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
                       key_suffix: tuple, cache: bool) -> Callable:
     """Shared trace-cache machinery for ``truncate``/``memtrace``.
@@ -65,7 +80,7 @@ def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
         use_cache = cache and not _has_tracer(leaves)
         key = None
         if use_cache:
-            key = (in_tree, tuple(_leaf_key(l) for l in leaves)) + key_suffix
+            key = _signature_key(in_tree, leaves, key_suffix)
             entry = wrapped._cache.get(key)
             if entry is not None:
                 return entry(leaves)
@@ -104,6 +119,100 @@ def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto",
 
     return _cached_transform(fn, build, fallback,
                              (policy.cache_key(), impl), cache)
+
+
+class SweepHandle:
+    """One input signature's runtime-parameterized executable plus its site
+    layout. Every candidate policy runs through the same compiled callable —
+    only the ``(num_sites, 4)`` int32 format table changes.
+
+    * ``handle(table)`` — evaluate one candidate table.
+    * ``handle.batch(tables)`` — evaluate a ``(K, num_sites, 4)`` stack of
+      candidates in one vmapped call (outputs gain a leading K axis).
+    * ``handle.table(policy)`` — lower a :class:`TruncationPolicy` to its
+      table (unmatched sites get the identity row).
+    """
+
+    def __init__(self, index, run, run_batch, leaves):
+        self._index = index
+        self._run = run
+        self._run_batch = run_batch
+        self._leaves = leaves
+
+    @property
+    def sites(self):
+        return self._index.sites
+
+    @property
+    def num_sites(self) -> int:
+        return len(self._index)
+
+    def table(self, policy: TruncationPolicy) -> np.ndarray:
+        return self._index.table_for(policy)
+
+    def tables(self, policies) -> np.ndarray:
+        """Stack several candidate policies into a (K, num_sites, 4) batch."""
+        return np.stack([self._index.table_for(p) for p in policies])
+
+    def identity_table(self) -> np.ndarray:
+        return self._index.identity_table()
+
+    def __call__(self, table):
+        return self._run(table, self._leaves)
+
+    def batch(self, tables):
+        return self._run_batch(tables, self._leaves)
+
+
+def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
+                   impl: str = "auto", cache: bool = True) -> Callable:
+    """Runtime-parameterized op-mode: compile once, sweep policies for free.
+
+    ``site_policy`` fixes *where* quantization may happen — every equation
+    output it matches becomes an indexed quantize site (its formats are
+    irrelevant; use e.g. ``TruncationPolicy.everywhere("e5m2")`` for "any
+    float op", or one rule per search scope). Calling the returned wrapper
+    with concrete inputs yields a :class:`SweepHandle` bound to those
+    inputs; any candidate policy whose matched set is a subset of the site
+    policy's lowers to a format table and evaluates WITHOUT retracing or
+    recompiling. ``wrapper.n_traces`` counts actual jaxpr walks (one per
+    input signature)."""
+    def wrapped(*args, **kwargs) -> SweepHandle:
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        if _has_tracer(leaves):
+            raise TypeError(
+                "truncate_sweep handles concrete inputs only; compose "
+                "jit/grad with `truncate` instead")
+        key = _signature_key(in_tree, leaves,
+                             (site_policy.cache_key(), impl))
+        entry = wrapped._cache.get(key) if cache else None
+        if entry is None:
+            wrapped.n_traces += 1
+            closed, out_shape = jax.make_jaxpr(
+                fn, return_shape=True)(*args, **kwargs)
+            if _has_tracer(closed.consts):
+                # a closure captured a tracer from an enclosing trace: the
+                # handle would outlive that trace, and caching it would
+                # poison every later concrete call of the same signature
+                raise TypeError(
+                    "truncate_sweep traced a function that closes over a "
+                    "value from an enclosing jit/grad trace; call it "
+                    "outside the trace or pass the value as an argument")
+            out_tree = jax.tree_util.tree_structure(out_shape)
+            index = interpreter.enumerate_sites(closed, site_policy)
+            run, run_batch = interpreter.parameterized_callable(
+                closed, out_tree, index, impl)
+            entry = (index, run, run_batch)
+            if cache:
+                wrapped._cache[key] = entry
+        index, run, run_batch = entry
+        return SweepHandle(index, run, run_batch, leaves)
+
+    wrapped._cache = {}
+    wrapped.n_traces = 0
+    wrapped.cache_clear = wrapped._cache.clear
+    wrapped.cache_size = lambda: len(wrapped._cache)
+    return wrapped
 
 
 def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,

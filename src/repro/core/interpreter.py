@@ -8,6 +8,18 @@ function can be jit'ed, differentiated, pjit-sharded, and scanned like any
 other JAX function — the profiling instrument rides the normal compilation
 pipeline just as RAPTOR rides LTO.
 
+Two transforms share one walker:
+
+  * **policy-driven** (``eval_quantized``): formats are trace-time constants
+    — a new policy is a new trace + compile. Retains the static fast paths
+    and the full rule feature set (masks, dot-input quantization).
+  * **table-driven** (``eval_sites``): the walk only fixes *where* to
+    quantize (the sites matched by a site policy); *what* format each site
+    gets is a runtime ``(num_sites, 4)`` int32 table argument. One compile
+    per input signature serves every candidate policy — swap the table, or
+    ``vmap`` over a leading table axis to evaluate a whole ladder of
+    policies in one batched call (see ``api.truncate_sweep``).
+
 Higher-order primitives are handled recursively: ``jit``/``closed_call`` are
 inlined; ``scan``/``while``/``cond`` are rebuilt through their high-level
 APIs with transformed bodies; ``remat2`` is re-wrapped in ``jax.checkpoint``
@@ -16,8 +28,11 @@ jaxpr (grad-then-truncate sees plain primitives anyway).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +46,9 @@ def _safe_map(f, *xs):
     ls = [list(x) for x in xs]
     assert len({len(l) for l in ls}) == 1, 'length mismatch'
     return list(map(f, *ls))
-from repro.kernels.quantize_em.ops import quantize
+from repro.kernels.quantize_em.ops import (
+    quantize, quantize_dynamic, format_row, IDENTITY_ROW,
+)
 
 # primitives whose *inputs* we optionally quantize to emulate a low-precision
 # matrix unit with full-precision accumulation (TPU-realistic scenario)
@@ -47,6 +64,75 @@ def _maybe_quantize(val, rule: TruncationRule, impl: str):
     if rule.mask is not None:
         q = jnp.where(rule.mask(val), q, val)
     return q
+
+
+# --------------------------------------------------------------------------
+# per-equation transform contexts
+# --------------------------------------------------------------------------
+
+class _PolicyCtx:
+    """Trace-time-constant formats: the original op-mode transform."""
+
+    __slots__ = ("policy", "impl", "live")
+
+    def __init__(self, policy: TruncationPolicy, impl: str):
+        self.policy = policy
+        self.impl = impl
+        # fast path: a policy with no rules can never match — skip the
+        # per-equation-per-outvar matcher calls entirely (they are the
+        # dominant python cost of walking big jaxprs; see test_interpreter).
+        self.live = bool(policy.rules)
+
+    def eqn_outputs(self, jaxpr, eqn_idx, eqn, invals, name_stack):
+        prim = eqn.primitive
+        rule0 = None
+        if self.live and prim.name in _DOT_PRIMS and eqn.outvars:
+            rule0 = self.policy.rule_for(name_stack, prim.name,
+                                         eqn.outvars[0].aval.dtype)
+            if rule0 is not None and rule0.quantize_dot_inputs:
+                invals = [_maybe_quantize(v, rule0, self.impl) for v in invals]
+        outvals = prim.bind(*invals, **eqn.params)
+        if not prim.multiple_results:
+            outvals = [outvals]
+        outvals = list(outvals)
+        if not self.live:
+            return outvals
+        for i, (ov, var) in enumerate(zip(outvals, eqn.outvars)):
+            aval = var.aval
+            if not hasattr(aval, "dtype"):
+                continue
+            rule = rule0 if rule0 is not None else self.policy.rule_for(
+                name_stack, prim.name, aval.dtype)
+            if rule is not None and jnp.issubdtype(aval.dtype, jnp.floating):
+                if not (rule.quantize_dot_inputs and prim.name in _DOT_PRIMS):
+                    outvals[i] = _maybe_quantize(ov, rule, self.impl)
+        return outvals
+
+
+class _TableCtx:
+    """Runtime-table formats: matching was pre-resolved into a SiteIndex, so
+    the traced computation only carries static row indices into the traced
+    ``table`` argument."""
+
+    __slots__ = ("table", "index", "impl")
+
+    def __init__(self, table, index: "SiteIndex", impl: str):
+        self.table = table
+        self.index = index
+        self.impl = impl
+
+    def eqn_outputs(self, jaxpr, eqn_idx, eqn, invals, name_stack):
+        prim = eqn.primitive
+        outvals = prim.bind(*invals, **eqn.params)
+        if not prim.multiple_results:
+            outvals = [outvals]
+        outvals = list(outvals)
+        for i in range(len(outvals)):
+            site = self.index.lookup(jaxpr, eqn_idx, i, name_stack)
+            if site is not None:
+                outvals[i] = quantize_dynamic(outvals[i], self.table[site],
+                                              impl=self.impl)
+        return outvals
 
 
 def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
@@ -69,6 +155,11 @@ def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any
                    policy: TruncationPolicy, impl: str = "auto",
                    prefix: str = "") -> List[Any]:
     """Evaluate ``jaxpr`` with op-mode truncation under ``policy``."""
+    return _eval(jaxpr, consts, args, _PolicyCtx(policy, impl), prefix)
+
+
+def _eval(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
+          ctx, prefix: str = "") -> List[Any]:
     env = {}
 
     def read(v):
@@ -80,39 +171,174 @@ def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any
     _safe_map(write, jaxpr.constvars, consts)
     _safe_map(write, jaxpr.invars, args)
 
-    for eqn in jaxpr.eqns:
+    for eqn_idx, eqn in enumerate(jaxpr.eqns):
         invals = [read(v) for v in eqn.invars]
         prim = eqn.primitive
         name_stack = join_stack(prefix, str(eqn.source_info.name_stack))
         handler = _HOP_HANDLERS.get(prim.name)
         if handler is not None:
-            outvals = handler(eqn, invals, policy, impl, name_stack)
+            outvals = handler(eqn, invals, ctx, name_stack)
         else:
-            # input-side quantization for matrix units
-            rule0 = None
-            if prim.name in _DOT_PRIMS and eqn.outvars:
-                rule0 = policy.rule_for(name_stack, prim.name,
-                                        eqn.outvars[0].aval.dtype)
-                if rule0 is not None and rule0.quantize_dot_inputs:
-                    invals = [_maybe_quantize(v, rule0, impl) for v in invals]
-            outvals = prim.bind(*invals, **eqn.params)
-            if not prim.multiple_results:
-                outvals = [outvals]
-            outvals = list(outvals)
-            for i, (ov, var) in enumerate(zip(outvals, eqn.outvars)):
-                aval = var.aval
-                if not hasattr(aval, "dtype"):
-                    continue
-                rule = rule0 if rule0 is not None else policy.rule_for(
-                    name_stack, prim.name, aval.dtype)
-                if rule is not None and jnp.issubdtype(aval.dtype, jnp.floating):
-                    if not (rule.quantize_dot_inputs and prim.name in _DOT_PRIMS):
-                        outvals[i] = _maybe_quantize(ov, rule, impl)
+            outvals = ctx.eqn_outputs(jaxpr, eqn_idx, eqn, invals, name_stack)
         if not isinstance(outvals, (list, tuple)):
             outvals = [outvals]
         _safe_map(write, eqn.outvars, outvals)
 
     return [read(v) for v in jaxpr.outvars]
+
+
+# --------------------------------------------------------------------------
+# quantize-site enumeration (runtime-parameterized formats)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeSite:
+    """One policy-matched (equation, output) position in the jaxpr forest.
+
+    ``stack`` is the raw (un-normalized) joined name stack exactly as the
+    walker sees it, so re-matching a candidate policy against the site
+    reproduces the static transform's decision bit-for-bit."""
+
+    index: int
+    stack: str
+    prim: str
+    dtype: Any
+
+    @property
+    def scope(self) -> str:
+        from repro.core.policy import normalize_stack
+        return normalize_stack(self.stack)
+
+
+class SiteIndex:
+    """Order-stable site enumeration for one traced computation.
+
+    Maps (sub-jaxpr identity, eqn position, outvar position, name stack) ->
+    row of the runtime format table. The name stack is part of the key
+    because jax's tracing caches share sub-jaxpr *objects* across call
+    sites: one jitted helper called under two scopes is a single
+    ClosedJaxpr reached with two different stack prefixes, and each prefix
+    needs its own policy-matched rows. The jaxpr objects are pinned so the
+    id()-based keys can never be recycled while the index is alive."""
+
+    def __init__(self, sites: List[QuantizeSite], by_key: Dict, pinned: List):
+        self.sites = sites
+        self._by_key = by_key
+        self._pinned = pinned
+
+    def __len__(self) -> int:
+        return len(self.sites)
+
+    def lookup(self, jaxpr, eqn_idx: int, out_idx: int,
+               name_stack: str) -> Optional[int]:
+        return self._by_key.get((id(jaxpr), eqn_idx, out_idx, name_stack))
+
+    def identity_table(self) -> np.ndarray:
+        """The (num_sites, 4) table that quantizes nothing."""
+        return np.tile(IDENTITY_ROW, (len(self.sites), 1))
+
+    def table_for(self, policy: TruncationPolicy) -> np.ndarray:
+        """Lower a candidate policy to its (num_sites, 4) int32 format table.
+
+        Sites the policy does not match get the identity row; matched sites
+        get the matching rule's format. Raises for rules the runtime path
+        cannot represent (masks, dot-input quantization)."""
+        rows = np.tile(IDENTITY_ROW, (len(self.sites), 1))
+        for s in self.sites:
+            rule = policy.rule_for(s.stack, s.prim, s.dtype)
+            if rule is None:
+                continue
+            if rule.mask is not None or rule.quantize_dot_inputs:
+                raise ValueError(
+                    "runtime format tables support plain output-quantize "
+                    f"rules only (offending rule scope={rule.scope!r})")
+            rows[s.index] = format_row(rule.fmt)
+        return rows
+
+
+def enumerate_sites(closed: jcore.ClosedJaxpr,
+                    site_policy: TruncationPolicy) -> SiteIndex:
+    """Single structural walk enumerating every quantize site the
+    ``site_policy`` matches, in the same traversal order as the evaluator.
+
+    The site policy fixes *where* quantization may happen (its formats are
+    irrelevant); any candidate policy whose matched set is a subset of the
+    site policy's can then be lowered to a table via ``table_for``."""
+    for r in site_policy.rules:
+        if r.mask is not None or r.quantize_dot_inputs:
+            raise ValueError("site policies support plain output-quantize "
+                             "rules only")
+
+    sites: List[QuantizeSite] = []
+    by_key: Dict = {}
+    pinned: List = []
+    seen: set = set()
+
+    def walk(jaxpr: jcore.Jaxpr, prefix: str) -> None:
+        # a shared sub-jaxpr object must be walked once per distinct prefix:
+        # each call site carries its own stack and may match different rules
+        # (two call sites with an identical prefix collapse to the same
+        # keys/rows, which is exactly the static transform's decision too)
+        if (id(jaxpr), prefix) in seen:
+            return
+        seen.add((id(jaxpr), prefix))
+        pinned.append(jaxpr)
+        for eqn_idx, eqn in enumerate(jaxpr.eqns):
+            pname = eqn.primitive.name
+            name_stack = join_stack(prefix, str(eqn.source_info.name_stack))
+            if pname in _HOP_HANDLERS:
+                if pname == "cond":
+                    for br in eqn.params["branches"]:
+                        walk(_closed(br).jaxpr, name_stack)
+                elif pname == "while":
+                    walk(_closed(eqn.params["cond_jaxpr"]).jaxpr, name_stack)
+                    walk(_closed(eqn.params["body_jaxpr"]).jaxpr, name_stack)
+                else:
+                    key = ("call_jaxpr" if "call_jaxpr" in eqn.params
+                           else "jaxpr")
+                    walk(_closed(eqn.params[key]).jaxpr, name_stack)
+                continue
+            for out_idx, var in enumerate(eqn.outvars):
+                aval = var.aval
+                if (not hasattr(aval, "dtype")
+                        or not jnp.issubdtype(aval.dtype, jnp.floating)):
+                    continue
+                if site_policy.rule_for(name_stack, pname, aval.dtype) is None:
+                    continue
+                site = QuantizeSite(len(sites), name_stack, pname, aval.dtype)
+                by_key[(id(jaxpr), eqn_idx, out_idx, name_stack)] = site.index
+                sites.append(site)
+
+    pinned.append(closed)  # keep consts/jaxpr alive alongside the ids
+    walk(closed.jaxpr, "")
+    return SiteIndex(sites, by_key, pinned)
+
+
+def eval_sites(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
+               table, index: SiteIndex, impl: str = "auto") -> List[Any]:
+    """Evaluate ``jaxpr`` quantizing each enumerated site onto the format in
+    its ``table`` row — the runtime-parameterized twin of
+    ``eval_quantized``."""
+    return _eval(jaxpr, consts, args, _TableCtx(table, index, impl), "")
+
+
+def parameterized_callable(closed: jcore.ClosedJaxpr, out_tree,
+                           index: SiteIndex, impl: str = "auto"):
+    """Compile-once runtime-parameterized transform.
+
+    Returns ``(run, run_batch)``: ``run(table, flat)`` evaluates one
+    candidate format table; ``run_batch(tables, flat)`` vmaps over a leading
+    candidate axis, evaluating a whole ladder of policies in one batched
+    call. Either is compiled once per input signature — a new candidate
+    policy is just a new table value."""
+    def _run(table, flat):
+        outs = eval_sites(closed.jaxpr, closed.consts, list(flat),
+                          jnp.asarray(table, jnp.int32), index, impl)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    run = jax.jit(_run)
+    run_batch = jax.jit(jax.vmap(_run, in_axes=(0, None)))
+    return run, run_batch
 
 
 # --------------------------------------------------------------------------
@@ -125,14 +351,13 @@ def _closed(eqn_param) -> jcore.ClosedJaxpr:
     return jcore.ClosedJaxpr(eqn_param, ())
 
 
-def _handle_call(eqn, invals, policy, impl, prefix):
+def _handle_call(eqn, invals, ctx, prefix):
     key = "call_jaxpr" if "call_jaxpr" in eqn.params else "jaxpr"
     closed = _closed(eqn.params[key])
-    return eval_quantized(closed.jaxpr, closed.consts, invals, policy, impl,
-                          prefix)
+    return _eval(closed.jaxpr, closed.consts, invals, ctx, prefix)
 
 
-def _handle_scan(eqn, invals, policy, impl, prefix):
+def _handle_scan(eqn, invals, ctx, prefix):
     p = eqn.params
     closed = _closed(p["jaxpr"])
     nc, ncarry = p["num_consts"], p["num_carry"]
@@ -141,9 +366,8 @@ def _handle_scan(eqn, invals, policy, impl, prefix):
     xs = tuple(invals[nc + ncarry:])
 
     def body_fn(carry, x):
-        res = eval_quantized(closed.jaxpr, closed.consts,
-                             list(body_consts) + list(carry) + list(x),
-                             policy, impl, prefix)
+        res = _eval(closed.jaxpr, closed.consts,
+                    list(body_consts) + list(carry) + list(x), ctx, prefix)
         return tuple(res[:ncarry]), tuple(res[ncarry:])
 
     carry_out, ys = lax.scan(body_fn, carry_in, xs, length=p["length"],
@@ -151,7 +375,7 @@ def _handle_scan(eqn, invals, policy, impl, prefix):
     return list(carry_out) + list(ys)
 
 
-def _handle_while(eqn, invals, policy, impl, prefix):
+def _handle_while(eqn, invals, ctx, prefix):
     p = eqn.params
     cond_closed = _closed(p["cond_jaxpr"])
     body_closed = _closed(p["body_jaxpr"])
@@ -161,51 +385,47 @@ def _handle_while(eqn, invals, policy, impl, prefix):
     carry_in = tuple(invals[cn + bn:])
 
     def cond_fn(carry):
-        res = eval_quantized(cond_closed.jaxpr, cond_closed.consts,
-                             list(cond_consts) + list(carry), policy, impl,
-                             prefix)
+        res = _eval(cond_closed.jaxpr, cond_closed.consts,
+                    list(cond_consts) + list(carry), ctx, prefix)
         return res[0]
 
     def body_fn(carry):
-        res = eval_quantized(body_closed.jaxpr, body_closed.consts,
-                             list(body_consts) + list(carry), policy, impl,
-                             prefix)
+        res = _eval(body_closed.jaxpr, body_closed.consts,
+                    list(body_consts) + list(carry), ctx, prefix)
         return tuple(res)
 
     out = lax.while_loop(cond_fn, body_fn, carry_in)
     return list(out)
 
 
-def _handle_cond(eqn, invals, policy, impl, prefix):
+def _handle_cond(eqn, invals, ctx, prefix):
     branches = eqn.params["branches"]
     index, *operands = invals
 
     def make_branch(br):
         closed = _closed(br)
         return lambda *ops: tuple(
-            eval_quantized(closed.jaxpr, closed.consts, list(ops), policy,
-                           impl, prefix))
+            _eval(closed.jaxpr, closed.consts, list(ops), ctx, prefix))
 
     out = lax.switch(index, [make_branch(b) for b in branches], *operands)
     return list(out)
 
 
-def _handle_remat(eqn, invals, policy, impl, prefix):
+def _handle_remat(eqn, invals, ctx, prefix):
     closed = _closed(eqn.params["jaxpr"])
 
     @functools.partial(jax.checkpoint, policy=eqn.params.get("policy"),
                        prevent_cse=eqn.params.get("prevent_cse", True))
     def inner(*args):
-        return tuple(eval_quantized(closed.jaxpr, closed.consts, list(args),
-                                    policy, impl, prefix))
+        return tuple(_eval(closed.jaxpr, closed.consts, list(args), ctx,
+                           prefix))
 
     return list(inner(*invals))
 
 
-def _handle_custom_call(eqn, invals, policy, impl, prefix):
+def _handle_custom_call(eqn, invals, ctx, prefix):
     closed = _closed(eqn.params["call_jaxpr"])
-    return eval_quantized(closed.jaxpr, closed.consts, invals, policy, impl,
-                          prefix)
+    return _eval(closed.jaxpr, closed.consts, invals, ctx, prefix)
 
 
 _HOP_HANDLERS = {

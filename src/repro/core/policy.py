@@ -176,6 +176,15 @@ class TruncationRule:
         return scope_matches(self._rx, name_stack)
 
 
+# module-level census of *uncached* matcher evaluations: every rule_for call
+# that actually ran normalization + regex matching (memo hits and the
+# empty-policy short circuit in the interpreter don't count). Tests assert on
+# deltas of this counter to pin the fast paths down.
+MATCHER_EVALS = 0
+
+_MEMO_MISS = object()
+
+
 @dataclasses.dataclass(frozen=True)
 class TruncationPolicy:
     """An ordered rule list plus fenced-off scopes. The *first* matching rule
@@ -191,12 +200,29 @@ class TruncationPolicy:
         object.__setattr__(self, "excludes", tuple(self.excludes))
         object.__setattr__(
             self, "_ex_rx", tuple(compile_scope(p) for p in self.excludes))
+        # per-policy matcher memo: jaxprs repeat (name_stack, prim, dtype)
+        # triples heavily (every eqn of a scanned layer shares a stack), so
+        # the precompiled-regex walk runs once per distinct triple, not once
+        # per equation-outvar. Not a dataclass field: excluded from eq/hash.
+        object.__setattr__(self, "_match_memo", {})
 
     def cache_key(self) -> tuple:
         return (tuple(r.cache_key() for r in self.rules), self.excludes)
 
     def rule_for(self, name_stack: str, prim_name: str, out_dtype
                  ) -> Optional[TruncationRule]:
+        key = (name_stack, prim_name, out_dtype)
+        hit = self._match_memo.get(key, _MEMO_MISS)
+        if hit is not _MEMO_MISS:
+            return hit
+        global MATCHER_EVALS
+        MATCHER_EVALS += 1
+        rule = self._rule_for_uncached(name_stack, prim_name, out_dtype)
+        self._match_memo[key] = rule
+        return rule
+
+    def _rule_for_uncached(self, name_stack: str, prim_name: str, out_dtype
+                           ) -> Optional[TruncationRule]:
         name_stack = normalize_stack(name_stack)
         for rx in self._ex_rx:
             if scope_matches(rx, name_stack):

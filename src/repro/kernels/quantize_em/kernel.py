@@ -19,6 +19,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize_em import ref as _ref
 
 LANES = 1024  # 8 * 128 lane multiple
 
@@ -99,3 +102,39 @@ def quantize_2d(x, *, exp_bits: int, man_bits: int, saturate: bool = False,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------------------------------
+# runtime-parameterized kernel: format read from SMEM, not baked into the code
+# ---------------------------------------------------------------------------
+
+def _dyn_kernel(fmt_ref, x_ref, o_ref):
+    """``fmt_ref`` is the scalar-prefetched (4,) int32 format vector
+    (exp_bits, man_bits, saturate, ieee_inf) living in SMEM; the block math
+    is the shared traced-scalar path (pure bit ops + where gates, f32 only),
+    so one compiled kernel serves every format."""
+    o_ref[...] = _ref.quantize_ref_dynamic(
+        x_ref[...], fmt_ref[0], fmt_ref[1], fmt_ref[2], fmt_ref[3])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_2d_dynamic(x, fmt, *, block_rows: int = 1024,
+                        interpret: bool = False):
+    """Quantize a (rows, LANES) f32 array onto the grid described by the
+    runtime (4,) int32 vector ``fmt`` — same layout/grid as ``quantize_2d``
+    but compiled once for all formats."""
+    assert x.ndim == 2 and x.shape[1] == LANES, x.shape
+    rows = x.shape[0]
+    br = min(block_rows, rows)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pl.cdiv(rows, br),),
+        in_specs=[pl.BlockSpec((br, LANES), lambda i, fmt_ref: (i, 0))],
+        out_specs=pl.BlockSpec((br, LANES), lambda i, fmt_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _dyn_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(fmt, jnp.int32), x)

@@ -13,6 +13,8 @@ pair instead of the bit-math.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +23,19 @@ from repro.kernels.quantize_em import kernel as _kernel
 from repro.kernels.quantize_em import ref as _ref
 
 _HW_DTYPES = {(8, 7): jnp.bfloat16, (5, 10): jnp.float16}
+
+# Runtime format vectors: (exp_bits, man_bits, saturate, ieee_inf) as int32.
+# IDENTITY_ROW is at least as fine as any carrier grid and IEEE, so the
+# dynamic quantizer's in-kernel identity gate passes values through
+# unchanged — the runtime analogue of the static identity fast path.
+IDENTITY_ROW = np.array([11, 52, 0, 1], np.int32)
+
+
+def format_row(fmt) -> np.ndarray:
+    """Lower an ``FPFormat`` (or spec string) to its (4,) int32 runtime row."""
+    fmt = parse_format(fmt)
+    return np.array([fmt.exp_bits, fmt.man_bits, int(fmt.saturate),
+                     int(fmt.ieee_inf)], np.int32)
 
 
 def _on_tpu() -> bool:
@@ -70,23 +85,76 @@ def quantize(x, fmt, *, impl: str = "auto"):
     return y.astype(dt)
 
 
-def _pallas_any_shape(xf, fmt: FPFormat, *, interpret: bool):
-    """Flatten/pad to (rows, LANES), run the kernel, restore the shape."""
+def quantize_dynamic(x, fmt, *, impl: str = "auto"):
+    """Runtime-parameterized ``quantize``: ``fmt`` is a (4,) int32 array
+    (exp_bits, man_bits, saturate, ieee_inf) whose values are *runtime* data
+    — python ints, concrete arrays, or tracers (e.g. a row of a vmapped
+    format table).
+
+    One compiled executable serves every format: the static identity and
+    hardware-convert fast paths are replaced by the quantizer's in-kernel
+    ``man_bits >= carrier`` identity gate, so sweeping formats never
+    retraces or recompiles. Bit-for-bit identical to the static entry point
+    for every format with ``man_bits <= 23`` on f32 carriers (``<= 52`` on
+    f64) — see tests/test_quantize_dynamic.py. Non-float inputs pass
+    through; the result dtype equals the input dtype."""
+    dt = jnp.dtype(x.dtype) if hasattr(x, "dtype") else None
+    if dt is None or not jnp.issubdtype(dt, jnp.floating):
+        return x
+    fmt = jnp.asarray(fmt, jnp.int32)
+
+    # carrier selection mirrors the static path: f64 stays f64, rest via f32
+    if dt == jnp.dtype(jnp.float64):
+        return _ref.quantize_ref_dynamic(x, fmt[0], fmt[1], fmt[2], fmt[3])
+
+    xf = x.astype(jnp.float32)
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+
+    if impl == "ref":
+        y = _ref.quantize_ref_dynamic(xf, fmt[0], fmt[1], fmt[2], fmt[3])
+    elif impl in ("pallas", "interpret"):
+        y = _pallas_any_shape_dynamic(xf, fmt, interpret=(impl == "interpret"))
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.astype(dt)
+
+
+def _to_rows(xf):
+    """Flatten/pad an f32 array to (rows, LANES); no copy when lane-aligned."""
     lanes = _kernel.LANES
     n = xf.size
-    if n == 0:
-        return xf
     rows = -(-n // lanes)
     pad = rows * lanes - n
     flat = jnp.ravel(xf)
     if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    y2d = _kernel.quantize_2d(
-        flat.reshape(rows, lanes),
-        exp_bits=fmt.exp_bits, man_bits=fmt.man_bits, saturate=fmt.saturate,
-        ieee_inf=fmt.ieee_inf, interpret=interpret,
-    )
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, lanes), n, pad
+
+
+def _from_rows(y2d, shape, n, pad):
     out = jnp.ravel(y2d)
     if pad:
         out = out[:n]
-    return out.reshape(xf.shape)
+    return out.reshape(shape)
+
+
+def _pallas_any_shape(xf, fmt: FPFormat, *, interpret: bool):
+    """Flatten/pad to (rows, LANES), run the kernel, restore the shape."""
+    if xf.size == 0:
+        return xf
+    x2d, n, pad = _to_rows(xf)
+    y2d = _kernel.quantize_2d(
+        x2d,
+        exp_bits=fmt.exp_bits, man_bits=fmt.man_bits, saturate=fmt.saturate,
+        ieee_inf=fmt.ieee_inf, interpret=interpret,
+    )
+    return _from_rows(y2d, xf.shape, n, pad)
+
+
+def _pallas_any_shape_dynamic(xf, fmt, *, interpret: bool):
+    if xf.size == 0:
+        return xf
+    x2d, n, pad = _to_rows(xf)
+    y2d = _kernel.quantize_2d_dynamic(x2d, fmt, interpret=interpret)
+    return _from_rows(y2d, xf.shape, n, pad)

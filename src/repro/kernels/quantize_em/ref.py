@@ -101,3 +101,96 @@ def quantize_ref(x, exp_bits: int, man_bits: int, saturate: bool = False,
 def quantize_ref_fmt(x, fmt):
     """Convenience wrapper taking an ``FPFormat``."""
     return quantize_ref(x, fmt.exp_bits, fmt.man_bits, fmt.saturate, fmt.ieee_inf)
+
+
+# ---------------------------------------------------------------------------
+# runtime-parameterized variant: (e, m, saturate, ieee_inf) as traced values
+# ---------------------------------------------------------------------------
+#
+# ``quantize_ref`` above specializes the computation on the format at trace
+# time (python branches, numpy constants), so every distinct format costs a
+# retrace + recompile. ``quantize_ref_dynamic`` takes the format fields as
+# *traced scalars*: one compiled executable serves every (e, m, saturate,
+# ieee_inf), which is what collapses a precision-policy sweep to a single
+# XLA compilation. All static branches become lane-wise ``where`` gates; the
+# static identity fast path becomes the in-kernel ``man_bits >= carrier``
+# gate. Kept free of python-level f64 branches when the carrier is f32 so
+# the Pallas kernel can call it directly.
+
+
+def _pow2(n, dt):
+    """Exact 2**n in carrier dtype ``dt`` for traced int32 ``n``, built by
+    writing the exponent field directly (bitcast) — no transcendentals, so it
+    lowers inside a Pallas kernel. Saturates to 0 below the normal range and
+    to +inf above it; both ends are gated off by the callers."""
+    if jnp.dtype(dt) == jnp.dtype(jnp.float32):
+        int_dtype, man, bias, emax = jnp.int32, 23, 127, 255
+    else:
+        int_dtype, man, bias, emax = jnp.int64, 52, 1023, 2047
+    biased = jnp.clip(n + bias, 0, emax).astype(int_dtype)
+    return lax.bitcast_convert_type(
+        jnp.left_shift(biased, jnp.asarray(man, int_dtype)), jnp.dtype(dt))
+
+
+def quantize_ref_dynamic(x, exp_bits, man_bits, saturate, ieee_inf):
+    """Quantize carrier array ``x`` (f32/f64) onto the (e, m) grid where the
+    format fields are *runtime* scalars (python ints or traced int32).
+
+    Bit-for-bit identical to ``quantize_ref`` for any format whose mantissa
+    fits the carrier (``man_bits <= nmant``); formats at least as fine as the
+    carrier grid (and with IEEE overflow) are returned unchanged via the
+    in-kernel identity gate."""
+    dt = jnp.dtype(x.dtype)
+    if dt not in _CARRIER:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    int_dtype, c_man = _CARRIER[dt]
+    c_exp = 8 if c_man == 23 else 11
+    finfo = np.finfo(dt)
+
+    e = jnp.asarray(exp_bits, jnp.int32)
+    m = jnp.asarray(man_bits, jnp.int32)
+    sat = jnp.asarray(saturate, jnp.bool_)
+    inf = jnp.asarray(ieee_inf, jnp.bool_)
+
+    bias = jnp.left_shift(1, e - 1) - 1
+    max_exp = jnp.left_shift(1, e) - jnp.where(inf, 2, 1) - bias
+    min_exp = 1 - bias
+    m_eff = jnp.minimum(m, c_man)
+    two = np.array(2.0, dt)
+    max_finite = _pow2(max_exp, dt) * (
+        two - _pow2(jnp.where(inf, -m_eff, 1 - m_eff), dt))
+    min_normal = _pow2(min_exp, dt)
+    sub_scale = _pow2(min_exp - m, dt)
+
+    # ---- 1) normal-range mantissa RNE, traced shift amounts ----------------
+    one = jnp.asarray(1, int_dtype)
+    k = jnp.clip(c_man - m, 0, c_man)
+    kk = k.astype(int_dtype)
+    bits = lax.bitcast_convert_type(x, int_dtype)
+    half = jnp.left_shift(one, jnp.maximum(kk - one, 0))
+    keep = jnp.bitwise_not(jnp.left_shift(one, kk) - one)
+    # bit k of a two's-complement int is shift-direction agnostic, so the
+    # arithmetic right_shift (which broadcasts) stands in for the logical one
+    lsb = jnp.bitwise_and(jnp.right_shift(bits, kk), one)
+    rounded = jnp.bitwise_and(bits + (half - one) + lsb, keep)
+    y = jnp.where(k > 0, lax.bitcast_convert_type(rounded, dt), x)
+
+    # ---- 2) subnormal range: RNE onto the fixed-point grid -----------------
+    tiny = np.array(finfo.tiny, dt)
+    use_sub = (e < c_exp) & (sub_scale >= tiny)
+    ss = jnp.where(use_sub, sub_scale, np.array(1.0, dt))
+    x_sub = jnp.rint(x / ss) * ss
+    y = jnp.where(use_sub & (jnp.abs(x) < min_normal), x_sub, y)
+
+    # ---- 3) overflow --------------------------------------------------------
+    ovf = (max_finite <= np.array(finfo.max, dt)) & (jnp.abs(y) > max_finite)
+    sgn = jnp.sign(y)
+    y = jnp.where(ovf & sat, sgn * max_finite, y)
+    y = jnp.where(ovf & ~sat & inf, sgn * np.array(np.inf, dt), y)
+    y = jnp.where(ovf & ~sat & ~inf, np.array(np.nan, dt), y)
+
+    # ---- 4) specials + identity gate ---------------------------------------
+    y = jnp.where(jnp.isnan(x), x, y)
+    y = jnp.where(jnp.isinf(x), x, y)
+    identity = (m >= c_man) & (e >= c_exp) & inf & ~sat
+    return jnp.where(identity, x, y)

@@ -1,22 +1,26 @@
 """Automated mixed-precision search (the paper's §6.3 loop, closed).
 
 RAPTOR's workflow is manual: truncate a scope, look at the figure of merit,
-exclude the scopes that break, re-run. ``autosearch`` automates it:
+exclude the scopes that break, re-run. ``autosearch`` automates it on top of
+the runtime-parameterized quantize path (``api.truncate_sweep``):
 
-  1. **Trace once.** The profiled function is traced to a jaxpr a single
-     time; every candidate policy is evaluated by re-walking that jaxpr
-     under ``jax.jit`` (see ``interpreter.quantized_callable``), so each
-     candidate costs one compile and each repeat costs a kernel launch.
+  1. **Trace once, compile once.** The profiled function is traced to a
+     jaxpr a single time and every policy-matched quantize site is indexed
+     into a runtime ``(num_sites, 4)`` format table
+     (``interpreter.enumerate_sites``). Candidate policies are just table
+     values: the whole search runs through ONE ``vmap``-batched compiled
+     executable — no per-candidate retrace, no per-candidate recompile.
   2. **Scope discovery.** ``named_scope`` subtrees are enumerated and cut
      into a disjoint frontier of regions ordered by FLOPs.
-  3. **Per-scope bisection.** For each region *in isolation*, bisect the
-     mantissa-width ladder for the narrowest format whose error metric
-     stays under the threshold — the region's measured sensitivity, the
-     quantitative form of the paper's per-module truncation experiments.
+  3. **Per-scope ladder probe.** For each region *in isolation*, the whole
+     mantissa-width ladder is evaluated in one batched call and the
+     narrowest format whose error metric stays under the threshold is
+     assigned — the region's measured sensitivity, the quantitative form of
+     the paper's per-module truncation experiments.
   4. **Greedy-exclusion refinement.** If the joint policy misses the
-     threshold, rank regions by mem-mode flag counts (the paper's heatmap)
-     and exclude the most fragile one; repeat until the metric fits or the
-     evaluation budget runs out.
+     threshold, every single-scope exclusion candidate is evaluated (again
+     batched through the same executable) and the most error-reducing one
+     is excluded; repeat until the metric fits or the budget runs out.
 
 Every candidate evaluation is counted against ``budget``; the search
 degrades gracefully — regions it never reached simply stay full precision.
@@ -26,11 +30,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 import jax
 
-from repro.core import interpreter, memmode
+from repro.core import interpreter
 from repro.core.formats import FPFormat
-from repro.core.policy import TruncationPolicy, TruncationRule, normalize_stack
+from repro.core.policy import TruncationPolicy, TruncationRule
 from repro.search import metrics as _metrics
 from repro.search.scopes import ScopeInfo, discover_scopes
 
@@ -64,6 +70,12 @@ class SearchResult:
     final_error: float
     converged: bool
     history: List[Tuple[str, float]]  # (event, metric value)
+    # distinct dispatch signatures of the search's (fresh) jitted batched
+    # executable — exactly its XLA compilations under jit's caching contract
+    # (independently pinned by the compile-cache-counter tests): grows past
+    # 1 iff a signature regression (e.g. drifting batch width) sneaks in
+    n_compiles: int = 0
+    n_sites: int = 0                  # runtime-table rows (quantize sites)
 
     def policy(self) -> TruncationPolicy:
         rules = tuple(
@@ -106,48 +118,121 @@ def autosearch(fn: Callable, args: Sequence = (),
     Returns a :class:`SearchResult`; ``result.policy()`` is directly usable
     with ``api.truncate``. ``metric(ref_out, cand_out) -> float`` defaults to
     the max relative output deviation; ``budget`` caps the total number of
-    candidate evaluations (op-mode and mem-mode alike).
+    candidate evaluations. All candidates are evaluated through a single
+    runtime-parameterized executable (probing every ladder width of a region
+    in one vmapped call), so the search performs O(1) XLA compilations
+    regardless of budget, scope count, or ladder length.
+
+    ``memflag_threshold`` is accepted for backward compatibility but unused:
+    exclusion victims are now chosen by batched trial exclusion (which costs
+    the same budget as the old mem-mode ranking pass but reuses the compiled
+    sweep executable instead of compiling a shadow computation).
     """
+    del memflag_threshold  # legacy knob of the mem-mode ranking pass
     metric = metric or _metrics.default_metric
     kwargs = dict(kwargs or {})
     # index 0 of the ladder must always be full precision: scopes the search
-    # never validates (budget exhaustion, all-rejected bisections) are
-    # assigned widths[0] with error 0.0, which is only honest for identity.
+    # never validates (budget exhaustion, all-rejected probes) are assigned
+    # widths[0] with error 0.0, which is only honest for identity.
     widths = tuple(sorted({int(w) for w in widths}, reverse=True))
     if not widths or widths[0] < 23:
         widths = (23,) + widths
 
+    evals = 0
+    history: List[Tuple[str, float]] = []
+    compiles = 0
+    dispatch_sigs: set = set()
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[autosearch] {msg}", flush=True)
+
     closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
     out_tree = jax.tree_util.tree_structure(out_shape)
     leaves = jax.tree_util.tree_leaves((tuple(args), kwargs))
-
-    identity = TruncationPolicy(rules=())
-    ref_out = interpreter.quantized_callable(closed, out_tree, identity,
-                                             impl)(leaves)
 
     if scopes is None:
         scopes = discover_scopes(closed, min_fraction=min_fraction,
                                  max_scopes=max_scopes)
     scopes = list(scopes)
 
-    evals = 0
-    history: List[Tuple[str, float]] = []
+    def result(assignments, final_err):
+        return SearchResult(
+            assignments=assignments, exp_bits=exp_bits, threshold=threshold,
+            budget=budget, evals_used=evals, final_error=final_err,
+            converged=final_err <= threshold, history=history,
+            n_compiles=compiles, n_sites=n_sites)
 
-    def log(msg: str) -> None:
-        if verbose:
-            print(f"[autosearch] {msg}", flush=True)
+    cand_widths = [w for w in widths if w < 23]
+    n_sites = 0
+    if not scopes or not cand_widths or budget < 2:
+        # nothing searchable (or budget can't cover one probe + the joint
+        # check): everything stays full precision, which is trivially exact
+        assignments = {s.path: ScopeAssignment(s, widths[0], 0.0)
+                       for s in scopes}
+        history.append(("joint", 0.0))
+        return result(assignments, 0.0)
 
-    def evaluate(policy: TruncationPolicy, tag: str) -> float:
-        nonlocal evals
-        evals += 1
-        run = interpreter.quantized_callable(closed, out_tree, policy, impl)
-        err = metric(ref_out, run(leaves))
-        history.append((tag, err))
-        return err
+    # ---- the one trace + one executable the whole search runs through ------
+    # The site policy's matched set is the union of all candidate scopes;
+    # its format is irrelevant (tables carry the formats at runtime).
+    site_policy = TruncationPolicy(rules=tuple(
+        TruncationRule(fmt=FPFormat(exp_bits, 0), scope=s.path)
+        for s in scopes))
+    index = interpreter.enumerate_sites(closed, site_policy)
+    n_sites = len(index)
+    _, run_batch = interpreter.parameterized_callable(closed, out_tree, index,
+                                                      impl)
+    # fixed batch width: every call shares one (K, num_sites, 4) signature,
+    # so XLA compiles the batched evaluator exactly once. K fits a full
+    # per-scope ladder plus the reference row of the very first call.
+    K = len(cand_widths) + 1
+
+    ref_host: List[Optional[object]] = [None]  # full-precision outputs (np)
+
+    def eval_candidates(cands: List[Tuple[str, TruncationPolicy]]
+                        ) -> List[float]:
+        """Evaluate candidate policies through the batched executable,
+        chunked to the fixed width K; returns metric values and charges one
+        budget eval per candidate."""
+        nonlocal evals, compiles
+        errs: List[float] = []
+        pos = 0
+        while pos < len(cands) or ref_host[0] is None:
+            chunk = []
+            rows = []
+            if ref_host[0] is None:
+                rows.append(index.identity_table())
+            take = K - len(rows)
+            for tag, pol in cands[pos:pos + take]:
+                chunk.append(tag)
+                rows.append(index.table_for(pol))
+            pos += len(chunk)
+            while len(rows) < K:          # pad to the fixed signature
+                rows.append(index.identity_table())
+            stacked = np.stack(rows)
+            sig = (stacked.shape, str(stacked.dtype))
+            if sig not in dispatch_sigs:  # a new signature = a new compile
+                dispatch_sigs.add(sig)
+                compiles += 1
+            outs = run_batch(stacked, leaves)
+            host = jax.device_get(outs)   # numpy pytree, leading K axis
+            base = 0
+            if ref_host[0] is None:
+                ref_host[0] = jax.tree_util.tree_map(lambda a: a[0], host)
+                base = 1
+            for j, tag in enumerate(chunk):
+                cand = jax.tree_util.tree_map(
+                    lambda a, j=j: a[base + j], host)
+                err = metric(ref_host[0], cand)
+                history.append((tag, err))
+                evals += 1
+                errs.append(err)
+        return errs
 
     def policy_of(assign: Dict[str, ScopeAssignment],
-                  extra: Optional[Tuple[str, int]] = None
-                  ) -> TruncationPolicy:
+                  extra: Optional[Tuple[str, int]] = None,
+                  minus: Optional[str] = None) -> TruncationPolicy:
         rules = []
         pending = dict(assign)
         if extra is not None:
@@ -156,96 +241,65 @@ def autosearch(fn: Callable, args: Sequence = (),
                 scope=next(s for s in scopes if s.path == path),
                 man_bits=m, error_at_accept=0.0)
         for path, a in pending.items():
+            if path == minus:
+                continue
             f = a.fmt(exp_bits)
             if f is not None:
                 rules.append(TruncationRule(fmt=f, scope=path))
         return TruncationPolicy(rules=tuple(rules))
 
-    # ---- phase 1: solo per-scope mantissa bisection, widest work first -----
-    # Each candidate truncates ONE region; the accepted width is that
-    # region's measured sensitivity. Composition errors are phase 2's job.
-    # One evaluation stays reserved for the joint check so evals_used can
-    # never exceed the budget.
+    # ---- phase 1: solo per-scope ladder probe, widest work first -----------
+    # Each candidate truncates ONE region; all of a region's ladder widths
+    # are probed in one batched call and the narrowest admissible width is
+    # that region's measured sensitivity. Composition errors are phase 2's
+    # job. One evaluation stays reserved for the joint check so evals_used
+    # can never exceed the budget.
     reserve = 1
     assignments: Dict[str, ScopeAssignment] = {}
     for si in scopes:
-        if evals + reserve >= budget:
+        afford = budget - evals - reserve
+        if afford <= 0:
             assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
             continue
-        lo, hi = 0, len(widths) - 1       # index into widths; lo admissible
-        err_lo = 0.0
-        # probe the coarsest width first: one eval often settles the scope
-        err = evaluate(policy_of({}, (si.path, widths[hi])),
-                       f"bisect:{si.path}:m{widths[hi]}")
-        if err <= threshold:
-            lo, err_lo = hi, err
+        # under a tight budget probe the finest widths (most likely to be
+        # admissible, so the scope still gets some truncation)
+        probe = cand_widths[:afford]
+        errs = eval_candidates([
+            (f"ladder:{si.path}:m{w}", policy_of({}, (si.path, w)))
+            for w in probe])
+        passing = [(w, e) for w, e in zip(probe, errs) if e <= threshold]
+        if passing:
+            w_pick, err_pick = min(passing)   # narrowest admissible width
         else:
-            while hi - lo > 1 and evals + reserve < budget:
-                mid = (lo + hi) // 2
-                err = evaluate(policy_of({}, (si.path, widths[mid])),
-                               f"bisect:{si.path}:m{widths[mid]}")
-                if err <= threshold:
-                    lo, err_lo = mid, err
-                else:
-                    hi = mid
-        assignments[si.path] = ScopeAssignment(si, widths[lo], err_lo)
+            w_pick, err_pick = widths[0], 0.0
+        assignments[si.path] = ScopeAssignment(si, w_pick, err_pick)
         log(f"{si.path} ({si.fraction * 100:.1f}% flops) -> "
-            f"m{widths[lo]} (err {err_lo:.3e}, {evals} evals)")
+            f"m{w_pick} (err {err_pick:.3e}, {evals} evals)")
 
     # ---- phase 2: joint check + greedy-exclusion refinement ----------------
     if policy_of(assignments).rules:
-        final_err = evaluate(policy_of(assignments), "joint")
+        final_err = eval_candidates([("joint", policy_of(assignments))])[0]
     else:
         final_err = 0.0  # nothing truncated -> trivially exact, no eval owed
         history.append(("joint", 0.0))
     log(f"joint policy err {final_err:.3e}")
 
-    while (refine and final_err > threshold and evals + 2 <= budget
-           and any(not a.excluded and a.fmt(exp_bits) is not None
-                   for a in assignments.values())):
-        victim = _most_fragile_scope(
-            closed, out_tree, leaves, policy_of(assignments), assignments,
-            memflag_threshold if memflag_threshold is not None else threshold,
-            impl)
-        evals += 1  # the mem-mode ranking pass is a paid evaluation
-        if victim is None:
-            # heatmap flagged nothing attributable; fall back to the
-            # truncated scope carrying the most work
-            cands = [(p, a) for p, a in assignments.items()
-                     if not a.excluded and a.fmt(exp_bits) is not None]
-            victim = max(cands, key=lambda pa: pa[1].scope.flops)[0]
+    while refine and final_err > threshold and evals < budget:
+        live = [p for p, a in assignments.items()
+                if not a.excluded and a.fmt(exp_bits) is not None]
+        if not live:
+            break
+        # most fragile first: the scope whose solo error was worst is the
+        # likeliest culprit, so it is tried even under a clipped budget
+        live.sort(key=lambda p: -assignments[p].error_at_accept)
+        live = live[:budget - evals]
+        errs = eval_candidates([
+            (f"exclude?:{p}", policy_of(assignments, minus=p)) for p in live])
+        best = int(np.argmin(errs))
+        victim = live[best]
         assignments[victim].excluded = True
-        log(f"exclude {victim} (paper §6.3), re-run")
-        final_err = evaluate(policy_of(assignments), f"exclude:{victim}")
-        log(f"-> err {final_err:.3e}")
+        final_err = errs[best]
+        history.append((f"exclude:{victim}", final_err))
+        log(f"exclude {victim} (paper §6.3) -> err {final_err:.3e}")
 
-    return SearchResult(
-        assignments=assignments, exp_bits=exp_bits, threshold=threshold,
-        budget=budget, evals_used=evals, final_error=final_err,
-        converged=final_err <= threshold, history=history)
-
-
-def _most_fragile_scope(closed, out_tree, leaves, policy, assignments,
-                        flag_threshold: float, impl: str) -> Optional[str]:
-    """Rank assigned scopes by mem-mode flag counts under the joint policy
-    and return the worst non-excluded one (the paper's heatmap -> exclusion
-    step). Returns None when nothing attributable was flagged."""
-    run = memmode.shadowed_callable(closed, out_tree, policy,
-                                    flag_threshold, impl)
-    _, report = run(leaves)
-    flags = jax.device_get(report.flags)
-
-    per_scope: Dict[str, int] = {}
-    for i, desc in enumerate(report.locations):
-        loc_scope = normalize_stack(desc.split(" ")[0])
-        for path, a in assignments.items():
-            if a.excluded or a.man_bits >= 23:
-                continue
-            if loc_scope == path or loc_scope.startswith(path + "/"):
-                per_scope[path] = per_scope.get(path, 0) + int(flags[i])
-                break
-    live = {p: n for p, n in per_scope.items()
-            if n > 0 and not assignments[p].excluded}
-    if not live:
-        return None
-    return max(live, key=live.get)
+    return result(assignments, final_err)
