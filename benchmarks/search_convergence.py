@@ -105,6 +105,47 @@ def bench_autosearch(budget: int = 48, threshold: float = 5e-3):
     return result
 
 
+def bench_sharded_sweep(n_candidates: int = 8):
+    """Mesh-parallel ladder throughput: the same K-candidate table batch
+    evaluated through probe meshes of growing device count (the leading
+    candidate axis sharded, inputs replicated). Reports per-device-count
+    candidates/s — the payoff of distributing probe evaluations that the
+    single-device zero-recompile sweep leaves on the table. On a
+    single-device host only the ndev=1 row is emitted; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the curve."""
+    from repro.launch.mesh import make_probe_mesh
+
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    ladder = [TruncationPolicy.everywhere(f"e8m{m}")
+              for m in (15, 10, 7, 5, 3, 2, 23, 11)[:n_candidates]]
+    site = TruncationPolicy.everywhere("e8m2")
+
+    total = len(jax.devices())
+    counts = [n for n in (1, 2, 4, 8) if n <= total and total % n == 0]
+    base_rate = None
+    for ndev in counts:
+        mesh = make_probe_mesh(ndev)
+        sw = truncate_sweep(model.loss, site, mesh=mesh)
+        handle = sw(params, batch)
+        tables = handle.tables(ladder)
+        t, _ = timeit(lambda: handle.batch(tables), warmup=1, iters=3)
+        rate = len(ladder) / t
+        base_rate = base_rate or rate
+        csv_row(f"sharded_sweep_dev{ndev}", t / len(ladder) * 1e6,
+                f"ndev={ndev};candidates={len(ladder)}"
+                f";cands_per_s={rate:.1f}"
+                f";scaling={rate / base_rate:.2f}x")
+    return counts
+
+
+def run_sharded():
+    print("name,us_per_call,derived")
+    counts = bench_sharded_sweep()
+    print(f"\nsharded sweep measured at device counts {counts} "
+          f"(of {len(jax.devices())} visible)")
+
+
 def run():
     print("name,us_per_call,derived")
     ratio = bench_trace_cache()

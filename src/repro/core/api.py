@@ -58,6 +58,17 @@ def _has_tracer(xs) -> bool:
     return any(isinstance(x, jcore.Tracer) for x in xs)
 
 
+def _mesh_key(mesh, in_shardings, *extra) -> tuple:
+    """Hashable cache-key component for a (mesh, shardings) pair. Shardings
+    may arrive as an arbitrary pytree (lists are unhashable), so flatten to
+    (treedef, leaves) — NamedSharding/PartitionSpec leaves hash fine."""
+    if mesh is None and in_shardings is None and not any(extra):
+        return (None,)
+    leaves, tree = jax.tree_util.tree_flatten(
+        in_shardings, is_leaf=lambda x: x is None)
+    return (mesh, tree, tuple(leaves)) + extra
+
+
 def _signature_key(in_tree, leaves, suffix: tuple) -> tuple:
     """The shared trace-cache key scheme: input pytree structure + per-leaf
     aval signature + transform identity. Both the policy-keyed caches
@@ -70,7 +81,9 @@ def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
                       key_suffix: tuple, cache: bool) -> Callable:
     """Shared trace-cache machinery for ``truncate``/``memtrace``.
 
-    ``build(closed, out_tree)`` -> jit-closed callable taking flat leaves;
+    ``build(closed, out_tree, args, kwargs)`` -> jit-closed callable taking
+    flat leaves (args/kwargs are the example call, for resolving
+    per-argument shardings against the input structure);
     ``fallback(closed, out_tree, leaves)`` -> direct (uncached) evaluation,
     used under an outer trace where caching a jaxpr would leak tracers.
     """
@@ -89,7 +102,7 @@ def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
         out_tree = jax.tree_util.tree_structure(out_shape)
         if not use_cache or _has_tracer(closed.consts):
             return fallback(closed, out_tree, leaves)
-        entry = build(closed, out_tree)
+        entry = build(closed, out_tree, args, kwargs)
         wrapped._cache[key] = entry
         return entry(leaves)
 
@@ -101,24 +114,37 @@ def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
 
 
 def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto",
-             cache: bool = True) -> Callable:
+             cache: bool = True, mesh=None, in_shardings=None) -> Callable:
     """Return ``fn`` with op-mode truncation applied under ``policy``.
 
     The wrapper is an ordinary traceable JAX function: compose freely with
     ``jax.jit``, ``jax.grad`` (grad-then-truncate covers the backward pass),
     ``shard_map``/``pjit`` meshes, etc. Under an outer trace it falls back to
     direct interpretation; called concretely it reuses a jit-closed transform
-    per input signature (``wrapper.n_traces`` counts actual jaxpr walks)."""
-    def build(closed, out_tree):
-        return interpreter.quantized_callable(closed, out_tree, policy, impl)
+    per input signature (``wrapper.n_traces`` counts actual jaxpr walks).
+
+    ``mesh``/``in_shardings`` SPMD-partition the cached executable: inputs
+    are placed per the shardings (jit's convention — a single sharding or
+    ``PartitionSpec`` broadcasts to every leaf, or a pytree prefix of the
+    positional-args tuple; ``None`` replicates) and the truncated
+    computation runs data-parallel across the mesh. The fallback path under
+    an outer trace ignores them (the enclosing jit owns the partitioning)."""
+    from repro.distributed.sharding import flatten_arg_shardings
+
+    def build(closed, out_tree, bargs, bkwargs):
+        return interpreter.quantized_callable(
+            closed, out_tree, policy, impl,
+            flat_shardings=flatten_arg_shardings(
+                mesh, in_shardings, bargs, bkwargs))
 
     def fallback(closed, out_tree, leaves):
         outs = interpreter.eval_quantized(
             closed.jaxpr, closed.consts, leaves, policy, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
-    return _cached_transform(fn, build, fallback,
-                             (policy.cache_key(), impl), cache)
+    return _cached_transform(
+        fn, build, fallback,
+        (policy.cache_key(), impl, _mesh_key(mesh, in_shardings)), cache)
 
 
 class SweepHandle:
@@ -131,13 +157,20 @@ class SweepHandle:
       candidates in one vmapped call (outputs gain a leading K axis).
     * ``handle.table(policy)`` — lower a :class:`TruncationPolicy` to its
       table (unmatched sites get the identity row).
+
+    Under a sharded sweep (``truncate_sweep(..., mesh=...)``) the leading K
+    axis of ``batch`` is partitioned across the mesh's probe axis; ladders
+    whose K doesn't divide the axis are padded with identity rows and the
+    padded outputs sliced off, so results are positionally identical to the
+    unsharded path.
     """
 
-    def __init__(self, index, run, run_batch, leaves):
+    def __init__(self, index, run, run_batch, leaves, shard_multiple=1):
         self._index = index
         self._run = run
         self._run_batch = run_batch
         self._leaves = leaves
+        self._shard_multiple = shard_multiple
 
     @property
     def sites(self):
@@ -161,11 +194,23 @@ class SweepHandle:
         return self._run(table, self._leaves)
 
     def batch(self, tables):
-        return self._run_batch(tables, self._leaves)
+        k = int(np.shape(tables)[0])
+        mult = self._shard_multiple
+        pad = -k % mult
+        if pad:
+            tables = np.concatenate(
+                [np.asarray(tables),
+                 np.tile(self._index.identity_table(), (pad, 1, 1))])
+        outs = self._run_batch(tables, self._leaves)
+        if pad:
+            outs = jax.tree_util.tree_map(lambda a: a[:k], outs)
+        return outs
 
 
 def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
-                   impl: str = "auto", cache: bool = True) -> Callable:
+                   impl: str = "auto", cache: bool = True, mesh=None,
+                   batch_axis: str = "probe",
+                   in_shardings=None) -> Callable:
     """Runtime-parameterized op-mode: compile once, sweep policies for free.
 
     ``site_policy`` fixes *where* quantization may happen — every equation
@@ -176,15 +221,24 @@ def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
     inputs; any candidate policy whose matched set is a subset of the site
     policy's lowers to a format table and evaluates WITHOUT retracing or
     recompiling. ``wrapper.n_traces`` counts actual jaxpr walks (one per
-    input signature)."""
+    input signature).
+
+    ``mesh`` makes the sweep candidate-parallel: ``handle.batch`` shards the
+    leading K (candidate) axis over ``mesh.shape[batch_axis]`` devices —
+    table rows replicated, inputs placed per ``in_shardings`` (default
+    replicated) — so a W-candidate ladder evaluates on W/ndev devices
+    concurrently. Results stay bit-for-bit identical to the unsharded path
+    (ladders are identity-padded to the shard multiple and sliced back)."""
     def wrapped(*args, **kwargs) -> SweepHandle:
         leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
         if _has_tracer(leaves):
             raise TypeError(
                 "truncate_sweep handles concrete inputs only; compose "
                 "jit/grad with `truncate` instead")
-        key = _signature_key(in_tree, leaves,
-                             (site_policy.cache_key(), impl))
+        key = _signature_key(
+            in_tree, leaves,
+            (site_policy.cache_key(), impl,
+             _mesh_key(mesh, in_shardings, batch_axis)))
         entry = wrapped._cache.get(key) if cache else None
         if entry is None:
             wrapped.n_traces += 1
@@ -200,13 +254,19 @@ def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
                     "outside the trace or pass the value as an argument")
             out_tree = jax.tree_util.tree_structure(out_shape)
             index = interpreter.enumerate_sites(closed, site_policy)
+            from repro.distributed.sharding import flatten_arg_shardings
             run, run_batch = interpreter.parameterized_callable(
-                closed, out_tree, index, impl)
+                closed, out_tree, index, impl,
+                mesh=mesh, batch_axis=batch_axis,
+                flat_shardings=flatten_arg_shardings(
+                    mesh, in_shardings, args, kwargs))
             entry = (index, run, run_batch)
             if cache:
                 wrapped._cache[key] = entry
         index, run, run_batch = entry
-        return SweepHandle(index, run, run_batch, leaves)
+        from repro.distributed.sharding import probe_axis_size
+        return SweepHandle(index, run, run_batch, leaves,
+                           shard_multiple=probe_axis_size(mesh, batch_axis))
 
     wrapped._cache = {}
     wrapped.n_traces = 0
@@ -216,21 +276,37 @@ def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
 
 
 def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
-             *, impl: str = "auto", cache: bool = True) -> Callable:
+             *, impl: str = "auto", cache: bool = True, mesh=None,
+             in_shardings=None) -> Callable:
     """mem-mode: returns ``(outputs, RaptorReport)`` where the report carries
     per-source-location flag counts and max relative deviations of the
-    truncated values against full-precision shadow values."""
-    def build(closed, out_tree):
-        return memmode.shadowed_callable(closed, out_tree, policy, threshold,
-                                         impl)
+    truncated values against full-precision shadow values.
+
+    ``mesh``/``in_shardings`` run the paired (truncated, shadow) evaluation
+    data-parallel across a device mesh. The report stays EXACT under data
+    parallelism: flag/op counts are global sums and max_rel a global max,
+    reduced by XLA inside the partitioned executable — the thing RAPTOR's
+    pointer-swizzled shadow structs cannot do across ranks (paper §6.3).
+    For hand-rolled ``shard_map``/``pmap`` bodies, reduce per-shard reports
+    with ``RaptorReport.allreduce(axis_name)`` (in-SPMD) or
+    ``RaptorReport.merge_all(reports)`` (host-side)."""
+    from repro.distributed.sharding import flatten_arg_shardings
+
+    def build(closed, out_tree, bargs, bkwargs):
+        return memmode.shadowed_callable(
+            closed, out_tree, policy, threshold, impl,
+            flat_shardings=flatten_arg_shardings(
+                mesh, in_shardings, bargs, bkwargs))
 
     def fallback(closed, out_tree, leaves):
         outs, report = memmode.eval_shadowed(
             closed.jaxpr, closed.consts, leaves, policy, threshold, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
-    return _cached_transform(fn, build, fallback,
-                             (policy.cache_key(), threshold, impl), cache)
+    return _cached_transform(
+        fn, build, fallback,
+        (policy.cache_key(), threshold, impl,
+         _mesh_key(mesh, in_shardings)), cache)
 
 
 def profile_counts(fn: Callable, policy: TruncationPolicy) -> Callable:

@@ -82,6 +82,23 @@ class CountReport:
         full = self.flops_by_fmt.get("full", 0.0)
         return 0.0 if t == 0 else (t - full) / t
 
+    @staticmethod
+    def merge_all(reports) -> "CountReport":
+        """Cross-shard/process reduction: FLOP and byte tallies are pure
+        sums, so the global census of a data-parallel run is the elementwise
+        sum of per-shard reports (the counters analogue of
+        ``RaptorReport.merge_all``). Counting is static — a jaxpr walk — so
+        per-shard reports of an SPMD program differ only by their shard's
+        batch slice; summing them reproduces the global-batch census
+        exactly."""
+        reports = list(reports)
+        if not reports:
+            raise ValueError("merge_all needs at least one report")
+        out = reports[0]
+        for r in reports[1:]:
+            out = out.merged(r)
+        return out
+
     def merged(self, other: "CountReport") -> "CountReport":
         r = CountReport(dict(self.flops_by_fmt), dict(self.bytes_by_fmt),
                         dict(self.by_scope))

@@ -135,20 +135,35 @@ class _TableCtx:
         return outvals
 
 
+def _jit_sharded(fn, flat_shardings):
+    """``jax.jit`` over a flat-leaf-list callable with pre-resolved per-leaf
+    shardings (the output of ``distributed.sharding.flatten_arg_shardings``;
+    ``None`` = no sharding constraints)."""
+    if flat_shardings is None:
+        return jax.jit(fn)
+    return jax.jit(fn, in_shardings=(flat_shardings,))
+
+
 def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
-                       policy: TruncationPolicy, impl: str = "auto"):
+                       policy: TruncationPolicy, impl: str = "auto",
+                       *, flat_shardings=None):
     """jit-close the transformed computation once. The jaxpr walk (and its
     per-equation policy matching) happens a single time, at trace; every
     subsequent call with the same avals hits XLA's executable cache, so
     repeated evaluations — the precision-search inner loop — pay only the
-    kernel launch, not a re-interpretation."""
-    @jax.jit
+    kernel launch, not a re-interpretation.
+
+    ``flat_shardings`` (pre-resolved per-leaf, see ``distributed.sharding.
+    flatten_arg_shardings``) GSPMD-partition the executable: inputs are
+    placed per the shardings and the truncated computation runs
+    data-parallel across the mesh — profiling rides the normal SPMD
+    pipeline, formats and semantics unchanged."""
     def run(flat):
         outs = eval_quantized(closed.jaxpr, closed.consts, list(flat),
                               policy, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
-    return run
+    return _jit_sharded(run, flat_shardings)
 
 
 def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
@@ -323,21 +338,47 @@ def eval_sites(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
 
 
 def parameterized_callable(closed: jcore.ClosedJaxpr, out_tree,
-                           index: SiteIndex, impl: str = "auto"):
+                           index: SiteIndex, impl: str = "auto",
+                           *, mesh=None, batch_axis: str = "probe",
+                           flat_shardings=None):
     """Compile-once runtime-parameterized transform.
 
     Returns ``(run, run_batch)``: ``run(table, flat)`` evaluates one
     candidate format table; ``run_batch(tables, flat)`` vmaps over a leading
     candidate axis, evaluating a whole ladder of policies in one batched
     call. Either is compiled once per input signature — a new candidate
-    policy is just a new table value."""
+    policy is just a new table value.
+
+    With ``mesh`` the batched executable is GSPMD-partitioned: the leading
+    K (candidate) axis of ``tables`` is sharded over ``mesh.shape[batch_axis]``
+    devices — a W-candidate ladder evaluates on W/ndev devices concurrently —
+    while each candidate's ``(num_sites, 4)`` table rows stay replicated.
+    Profiled inputs follow ``flat_shardings`` (pre-resolved per-leaf, see
+    ``distributed.sharding.flatten_arg_shardings``; default replicated).
+    K must divide evenly across the axis — pad ladders with
+    ``index.identity_table()`` rows (``distributed.sharding.pad_to_shards``)
+    and drop the padded outputs."""
     def _run(table, flat):
         outs = eval_sites(closed.jaxpr, closed.consts, list(flat),
                           jnp.asarray(table, jnp.int32), index, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
-    run = jax.jit(_run)
-    run_batch = jax.jit(jax.vmap(_run, in_axes=(0, None)))
+    vb = jax.vmap(_run, in_axes=(0, None))
+    if mesh is None and flat_shardings is None:
+        return jax.jit(_run), jax.jit(vb)
+
+    from repro.distributed.sharding import probe_sharding, replicated
+
+    if mesh is not None:
+        data_sh = (flat_shardings if flat_shardings is not None
+                   else replicated(mesh))
+        table_sh = probe_sharding(mesh, batch_axis)
+        repl = replicated(mesh)
+    else:  # concrete shardings given, no mesh for the table axis
+        data_sh = flat_shardings
+        table_sh = repl = None
+    run = jax.jit(_run, in_shardings=(repl, data_sh))
+    run_batch = jax.jit(vb, in_shardings=(table_sh, data_sh))
     return run, run_batch
 
 

@@ -54,6 +54,54 @@ class RaptorReport:
             lines.append(f"  {f:>12d} {m:>12.3e}  {loc}")
         return "\n".join(lines)
 
+    # ---- cross-shard reductions (SPMD mem-mode) ---------------------------
+    # Exactness contract under data parallelism: ``flags`` and ``op_counts``
+    # are sums of per-element predicates, so the global report is the
+    # elementwise SUM of per-shard reports; ``max_rel`` is a MAX. Reducing
+    # per-shard reports with either method below therefore reproduces the
+    # single-device report bit-for-bit (integer sums are exact; float max is
+    # order-invariant). Note the jit/GSPMD path (``memtrace(mesh=...)``)
+    # needs NO explicit reduction — XLA already emits the cross-device
+    # collectives for the in-graph sums/maxes.
+
+    def allreduce(self, axis_name: str) -> "RaptorReport":
+        """In-SPMD reduction for per-shard reports built INSIDE a
+        ``shard_map``/``pmap`` body: ``psum`` of flags/op_counts, ``pmax``
+        of max_rel over the mapped mesh axis.
+
+        A shard_map body computes per-SHARD semantics, so the reduced
+        report equals the global one exactly when each shard's execution is
+        a slice of the global program (per-example models, contractions
+        along unsharded dims). Programs with cross-batch reductions (a
+        global mean/loss) should use ``memtrace(mesh=...)`` instead, where
+        GSPMD keeps the reduction — and hence the report — global."""
+        return RaptorReport(
+            self.locations,
+            lax.psum(self.flags, axis_name),
+            lax.pmax(self.max_rel, axis_name),
+            lax.psum(self.op_counts, axis_name))
+
+    def merge(self, other: "RaptorReport") -> "RaptorReport":
+        """Host-side pairwise reduction (e.g. across processes/ranks)."""
+        if self.locations != other.locations:
+            raise ValueError("RaptorReport.merge: location tables differ "
+                             "(reports come from different computations)")
+        return RaptorReport(
+            self.locations,
+            jnp.asarray(self.flags) + jnp.asarray(other.flags),
+            jnp.maximum(jnp.asarray(self.max_rel),
+                        jnp.asarray(other.max_rel)),
+            jnp.asarray(self.op_counts) + jnp.asarray(other.op_counts))
+
+    @staticmethod
+    def merge_all(reports: Sequence["RaptorReport"]) -> "RaptorReport":
+        if not reports:
+            raise ValueError("merge_all needs at least one report")
+        out = reports[0]
+        for r in reports[1:]:
+            out = out.merge(r)
+        return out
+
 
 def _tree_flags():
     return jax.tree_util.tree_structure((0, 0, 0))
@@ -95,17 +143,24 @@ def _accumulate(stats, idx: int, low, shadow, threshold: float):
 
 def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
                       policy: TruncationPolicy, threshold: float,
-                      impl: str = "auto"):
+                      impl: str = "auto", *, flat_shardings=None):
     """jit-close the paired (truncated, shadow) evaluation once — the
     mem-mode analogue of ``interpreter.quantized_callable``. The RaptorReport
-    rides out of jit as a pytree (static location table, array stats)."""
-    @jax.jit
+    rides out of jit as a pytree (static location table, array stats).
+
+    ``flat_shardings`` (pre-resolved per-leaf, see ``distributed.sharding.
+    flatten_arg_shardings``) GSPMD-partition the paired evaluation over the
+    mesh; the report's in-graph sums/maxes become global collectives so it
+    is exact under data parallelism (see ``RaptorReport`` reduction
+    notes)."""
+    from repro.core.interpreter import _jit_sharded
+
     def run(flat):
         outs, report = eval_shadowed(closed.jaxpr, closed.consts, list(flat),
                                      policy, threshold, impl)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
-    return run
+    return _jit_sharded(run, flat_shardings)
 
 
 def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],

@@ -157,3 +157,113 @@ def param_sharding(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
 
 def param_pspec(shape, logical, mesh) -> P:
     return _resolve(_ctx().mesh or mesh, _ctx().param_rules, logical, shape)
+
+
+# ---------------------------------------------------------------------------
+# profiling-stack shardings (mesh-parallel truncate / mem-mode / autosearch)
+# ---------------------------------------------------------------------------
+# The sharded profiling path partitions work along exactly two axes:
+#   * the CANDIDATE axis — the leading K axis of a (K, num_sites, 4) format
+#     table batch. Each candidate policy is independent, so sharding K over
+#     `probe_axis` evaluates K/ndev candidates per device concurrently.
+#   * the DATA axis — ordinary data parallelism over the profiled inputs.
+# The (num_sites, 4) table rows themselves are always replicated: every
+# device sees its candidates' full site tables.
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated sharding (format tables, small operands)."""
+    return NamedSharding(mesh, P())
+
+
+def probe_sharding(mesh: Mesh, axis: str = "probe") -> NamedSharding:
+    """Shard the leading candidate axis of a table batch over ``axis``.
+
+    Falls back to replication when the mesh has no such axis (so a
+    data-only mesh can still call the sharded entry points)."""
+    if axis not in mesh.shape:
+        return replicated(mesh)
+    return NamedSharding(mesh, P(axis))
+
+
+def batch_sharding(mesh: Mesh, axis: str = "data") -> NamedSharding:
+    """Shard the leading (batch) dim of profiled inputs over ``axis``."""
+    if axis not in mesh.shape:
+        return replicated(mesh)
+    return NamedSharding(mesh, P(axis))
+
+
+def probe_axis_size(mesh: Optional[Mesh], axis: str = "probe") -> int:
+    """Number of shards the candidate axis is split into (1 = unsharded)."""
+    if mesh is None or axis not in mesh.shape:
+        return 1
+    return int(mesh.shape[axis])
+
+
+def pad_to_shards(n: int, mesh: Optional[Mesh], axis: str = "probe") -> int:
+    """Round a candidate-batch width up so the leading axis divides evenly
+    across the mesh's ``axis`` (GSPMD rejects uneven named shardings)."""
+    size = probe_axis_size(mesh, axis)
+    return -(-n // size) * size
+
+
+def _is_sharding_leaf(x) -> bool:
+    return (x is None or isinstance(x, P)
+            or isinstance(x, jax.sharding.Sharding))
+
+
+def flatten_arg_shardings(mesh: Optional[Mesh], in_shardings,
+                          args, kwargs) -> Optional[list]:
+    """Resolve a user-facing ``in_shardings`` to the flat per-leaf list the
+    profiling callables jit with (their traced signature is one flat list
+    of input leaves, not the original arguments).
+
+    ``in_shardings`` follows jit's convention: a single sharding /
+    ``PartitionSpec`` / ``None`` broadcasts to every POSITIONAL leaf, or a
+    pytree prefix of the positional-args tuple whose entries broadcast over
+    their argument's subtree (so ``[None, batch_sharding(mesh)]`` shards
+    the whole second argument however deep its pytree is). Keyword-argument
+    leaves always replicate (jit's in_shardings covers positional args
+    only, and kwargs are typically scalars/config that can't take a spec).
+    ``None`` entries and ``PartitionSpec`` entries resolve against ``mesh``
+    (``None`` -> replicated); concrete ``Sharding`` objects pass through.
+    Returns ``None`` when there is nothing to shard (no mesh and no
+    shardings)."""
+    if mesh is None and in_shardings is None:
+        return None
+
+    def resolve(s):
+        if s is None:
+            return NamedSharding(mesh, P()) if mesh is not None else None
+        if isinstance(s, P):
+            if mesh is None:
+                raise ValueError("PartitionSpec in_shardings need a mesh= "
+                                 "to resolve against")
+            return NamedSharding(mesh, s)
+        return s
+
+    if _is_sharding_leaf(in_shardings):
+        n_args = len(jax.tree_util.tree_leaves(tuple(args)))
+        n_kw = len(jax.tree_util.tree_leaves(kwargs))
+        return ([resolve(in_shardings)] * n_args
+                + [resolve(None)] * n_kw)
+
+    prefix = tuple(in_shardings) if isinstance(in_shardings, list) \
+        else in_shardings
+    flat: list = []
+    # tree_map flattens ``prefix`` and hands each of its leaves the
+    # CORRESPONDING SUBTREE of args (flatten_up_to semantics): one prefix
+    # entry per argument, broadcast over that argument's leaves
+    def spread(s, arg_subtree):
+        n = jax.tree_util.tree_structure(arg_subtree).num_leaves
+        flat.extend([resolve(s)] * n)
+        return s
+
+    try:
+        jax.tree_util.tree_map(spread, prefix, tuple(args),
+                               is_leaf=_is_sharding_leaf)
+    except ValueError as e:
+        raise ValueError(
+            "in_shardings must be a single sharding/PartitionSpec/None or "
+            f"a pytree prefix of the positional-args tuple: {e}") from e
+    flat.extend([resolve(None)] * len(jax.tree_util.tree_leaves(kwargs)))
+    return flat

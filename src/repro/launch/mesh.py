@@ -28,3 +28,35 @@ def make_host_mesh(model_parallel: int = 1):
     while mp > 1 and n % mp:
         mp //= 2
     return compat.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def make_probe_mesh(n_devices: int | None = None, axis: str = "probe"):
+    """1-D mesh for mesh-parallel profiling: the leading candidate axis of a
+    (K, num_sites, 4) format-table batch is sharded over ``axis`` so a
+    W-candidate ladder evaluates on W/ndev devices concurrently (see
+    ``api.truncate_sweep(mesh=...)`` / ``search.autosearch(mesh=...)``).
+
+    ``n_devices`` takes a prefix of ``jax.devices()`` (useful for measuring
+    per-device-count throughput); default is every visible device. On CPU,
+    emulate a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    devs = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"make_probe_mesh: {n_devices} devices requested, "
+                f"{len(devs)} visible")
+        devs = devs[:n_devices]
+    return compat.make_mesh((len(devs),), (axis,), devices=devs)
+
+
+def make_profile_mesh(probe: int, data: int = 1, *,
+                      axes=("probe", "data")):
+    """2-D (probe, data) mesh: candidate-parallel x data-parallel profiling.
+    ``probe * data`` must not exceed the visible device count."""
+    n = probe * data
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(f"make_profile_mesh: {n} devices requested, "
+                         f"{len(devs)} visible")
+    return compat.make_mesh((probe, data), tuple(axes), devices=devs[:n])

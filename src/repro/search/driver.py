@@ -76,6 +76,23 @@ class SearchResult:
     # 1 iff a signature regression (e.g. drifting batch width) sneaks in
     n_compiles: int = 0
     n_sites: int = 0                  # runtime-table rows (quantize sites)
+    n_dispatches: int = 0             # batched-executable launches
+    probe_batch: int = 0              # K: table rows per dispatch (padded)
+    max_dispatch_rows: int = 0        # most REAL rows (ref + candidates)
+                                      # any single dispatch carried —
+                                      # identity padding never counted
+    n_devices: int = 1                # probe-axis shards (1 = unsharded)
+
+    @property
+    def probes_per_dispatch_per_device(self) -> float:
+        """Effective probe evaluations per device in the busiest dispatch:
+        real rows (reference + candidates actually consumed, NOT identity
+        padding) divided by the probe-axis shard count. > 1 means the
+        sharded ladder still batches several real probes onto every device
+        per launch (the tentpole's throughput contract)."""
+        if self.n_devices <= 0:
+            return 0.0
+        return self.max_dispatch_rows / self.n_devices
 
     def policy(self) -> TruncationPolicy:
         rules = tuple(
@@ -112,6 +129,7 @@ def autosearch(fn: Callable, args: Sequence = (),
                min_fraction: float = 0.01, max_scopes: Optional[int] = None,
                memflag_threshold: Optional[float] = None,
                impl: str = "auto", refine: bool = True,
+               mesh=None, batch_axis: str = "probe", in_shardings=None,
                verbose: bool = False) -> SearchResult:
     """Search a per-scope mixed-precision assignment for ``fn(*args)``.
 
@@ -122,6 +140,15 @@ def autosearch(fn: Callable, args: Sequence = (),
     runtime-parameterized executable (probing every ladder width of a region
     in one vmapped call), so the search performs O(1) XLA compilations
     regardless of budget, scope count, or ladder length.
+
+    ``mesh`` shards the candidate batches of BOTH phases — per-scope ladder
+    probes and greedy-exclusion rounds — across ``mesh.shape[batch_axis]``
+    devices: the fixed-width (K, num_sites, 4) table stack is partitioned on
+    its leading candidate axis (rows replicated, profiled inputs placed per
+    ``in_shardings``, default replicated), K rounded up to the shard
+    multiple so every launch divides evenly. Budget accounting, probe order,
+    and the returned assignments are identical to the single-device path —
+    padded slots are identity rows whose outputs are never read.
 
     ``memflag_threshold`` is accepted for backward compatibility but unused:
     exclusion victims are now chosen by batched trial exclusion (which costs
@@ -138,9 +165,14 @@ def autosearch(fn: Callable, args: Sequence = (),
     if not widths or widths[0] < 23:
         widths = (23,) + widths
 
+    from repro.distributed.sharding import pad_to_shards, probe_axis_size
+
     evals = 0
     history: List[Tuple[str, float]] = []
     compiles = 0
+    dispatches = 0
+    max_rows = 0
+    ndev = probe_axis_size(mesh, batch_axis)
     dispatch_sigs: set = set()
 
     def log(msg: str) -> None:
@@ -161,10 +193,12 @@ def autosearch(fn: Callable, args: Sequence = (),
             assignments=assignments, exp_bits=exp_bits, threshold=threshold,
             budget=budget, evals_used=evals, final_error=final_err,
             converged=final_err <= threshold, history=history,
-            n_compiles=compiles, n_sites=n_sites)
+            n_compiles=compiles, n_sites=n_sites, n_dispatches=dispatches,
+            probe_batch=K, max_dispatch_rows=max_rows, n_devices=ndev)
 
     cand_widths = [w for w in widths if w < 23]
     n_sites = 0
+    K = 0
     if not scopes or not cand_widths or budget < 2:
         # nothing searchable (or budget can't cover one probe + the joint
         # check): everything stays full precision, which is trivially exact
@@ -181,12 +215,18 @@ def autosearch(fn: Callable, args: Sequence = (),
         for s in scopes))
     index = interpreter.enumerate_sites(closed, site_policy)
     n_sites = len(index)
-    _, run_batch = interpreter.parameterized_callable(closed, out_tree, index,
-                                                      impl)
+    from repro.distributed.sharding import flatten_arg_shardings
+    _, run_batch = interpreter.parameterized_callable(
+        closed, out_tree, index, impl,
+        mesh=mesh, batch_axis=batch_axis,
+        flat_shardings=flatten_arg_shardings(mesh, in_shardings,
+                                             tuple(args), kwargs))
     # fixed batch width: every call shares one (K, num_sites, 4) signature,
     # so XLA compiles the batched evaluator exactly once. K fits a full
-    # per-scope ladder plus the reference row of the very first call.
-    K = len(cand_widths) + 1
+    # per-scope ladder plus the reference row of the very first call; under
+    # a mesh it is rounded up so the sharded candidate axis divides evenly
+    # (padded slots carry identity rows and their outputs are never read).
+    K = pad_to_shards(len(cand_widths) + 1, mesh, batch_axis)
 
     ref_host: List[Optional[object]] = [None]  # full-precision outputs (np)
 
@@ -195,7 +235,7 @@ def autosearch(fn: Callable, args: Sequence = (),
         """Evaluate candidate policies through the batched executable,
         chunked to the fixed width K; returns metric values and charges one
         budget eval per candidate."""
-        nonlocal evals, compiles
+        nonlocal evals, compiles, dispatches, max_rows
         errs: List[float] = []
         pos = 0
         while pos < len(cands) or ref_host[0] is None:
@@ -208,6 +248,7 @@ def autosearch(fn: Callable, args: Sequence = (),
                 chunk.append(tag)
                 rows.append(index.table_for(pol))
             pos += len(chunk)
+            max_rows = max(max_rows, len(rows))  # real rows, pre-padding
             while len(rows) < K:          # pad to the fixed signature
                 rows.append(index.identity_table())
             stacked = np.stack(rows)
@@ -215,6 +256,7 @@ def autosearch(fn: Callable, args: Sequence = (),
             if sig not in dispatch_sigs:  # a new signature = a new compile
                 dispatch_sigs.add(sig)
                 compiles += 1
+            dispatches += 1
             outs = run_batch(stacked, leaves)
             host = jax.device_get(outs)   # numpy pytree, leading K axis
             base = 0

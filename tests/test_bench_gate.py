@@ -1,0 +1,176 @@
+"""Bench regression gate (CI satellite): compare.py must pass on
+unchanged metrics, demonstrably fail on an injected 2x slowdown, and
+benchmarks/run.py must exit nonzero when a benchmark raises (no more
+green jobs on partial artifacts)."""
+import json
+import os
+
+from benchmarks import run as bench_run
+from benchmarks.compare import GATED, compare, load_artifacts, main as gate_main
+
+
+def _artifact(name, rows):
+    return {"benchmark": name, "wall_s": 1.0, "meta": {},
+            "rows": [{"name": n, "us_per_call": v, "derived": {}}
+                     for n, v in rows.items()]}
+
+
+def _write(dirpath, art):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, f"BENCH_{art['benchmark']}.json"),
+              "w") as f:
+        json.dump(art, f)
+
+
+BASE_ROWS = {"truncate_cached_call": 100.0,
+             "policy_sweep_per_candidate_table": 200.0,
+             "policy_sweep_per_candidate_steady": 50.0,
+             "autosearch_wall_us": 1e6,
+             "autosearch_truncated_flops_pct": 90.0}  # not gated
+
+
+def test_gate_passes_on_identical_and_noise_within_threshold(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    _write(fresh, _artifact("search_convergence",
+                            {k: v * 1.2 for k, v in BASE_ROWS.items()}))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert failures == []
+    assert gate_main([str(base), str(fresh)]) == 0
+
+
+def test_gate_fails_on_injected_2x_slowdown(tmp_path):
+    """The acceptance check: a 2x regression on a gated metric must fail."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    slow = dict(BASE_ROWS)
+    slow["policy_sweep_per_candidate_table"] *= 2.0
+    _write(fresh, _artifact("search_convergence", slow))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert len(failures) == 1
+    assert "policy_sweep_per_candidate_table" in failures[0]
+    assert gate_main([str(base), str(fresh)]) == 1
+
+
+def test_gate_ignores_ungated_regressions(tmp_path):
+    """Counts/percentages (not opted into GATED) never fail the gate."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    noisy = dict(BASE_ROWS)
+    noisy["autosearch_truncated_flops_pct"] *= 10
+    _write(fresh, _artifact("search_convergence", noisy))
+    assert compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                   0.25, log=lambda *_: None) == []
+
+
+def test_gate_fails_on_missing_fresh_artifact(tmp_path):
+    """A gated benchmark that silently didn't run must fail the gate (the
+    failure mode the run.py bugfix closes at the producer end)."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    os.makedirs(fresh, exist_ok=True)
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert failures and "missing" in failures[0]
+
+
+def test_gate_direction_higher_is_better(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("tp", {"throughput": 100.0}))
+    _write(fresh, _artifact("tp", {"throughput": 40.0}))
+    gated = {"tp": {"throughput": "higher"}}
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, gated=gated, log=lambda *_: None)
+    assert len(failures) == 1
+    ok = compare(load_artifacts(str(base)), load_artifacts(str(base)),
+                 0.25, gated=gated, log=lambda *_: None)
+    assert ok == []
+
+
+KERNEL_ROWS = {"quantize_e5m7_4M": 1000.0,
+               "flash_attn_B1H8S1024D64": 5000.0,
+               "wkv6_B1H8S512hd64": 800.0}
+
+
+def test_gate_normalizes_out_a_uniformly_slower_machine(tmp_path):
+    """Committed baselines come from a different machine than CI: a uniform
+    3x slowdown (runner hardware) moves the calibration row too and must
+    PASS, while the same fresh artifacts with an ADDITIONAL 2x regression
+    in a search metric must still FAIL."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    _write(base, _artifact("kernels_micro", KERNEL_ROWS))
+    _write(fresh, _artifact("search_convergence",
+                            {k: v * 3.0 for k, v in BASE_ROWS.items()}))
+    _write(fresh, _artifact("kernels_micro",
+                            {k: v * 3.0 for k, v in KERNEL_ROWS.items()}))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert failures == [], failures
+
+    worse = {k: v * 3.0 for k, v in BASE_ROWS.items()}
+    worse["autosearch_wall_us"] *= 2.0          # real regression on top
+    _write(fresh, _artifact("search_convergence", worse))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert len(failures) == 1 and "autosearch_wall_us" in failures[0]
+
+
+def test_gate_calibration_row_catches_catastrophic_kernel_regression(
+        tmp_path):
+    """The calibration row is gated un-normalized with the loose threshold:
+    5x on the quantize kernel itself fails even though it IS the machine
+    factor."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("kernels_micro", KERNEL_ROWS))
+    broken = dict(KERNEL_ROWS)
+    broken["quantize_e5m7_4M"] *= 5.0
+    _write(fresh, _artifact("kernels_micro", broken))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert any("quantize_e5m7_4M" in f for f in failures), failures
+
+
+def test_committed_baselines_cover_the_gated_ci_benchmarks():
+    """The gate only has teeth if baselines for the gated benchmarks are
+    committed; keep GATED and benchmarks/baselines/ in sync."""
+    here = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines")
+    arts = load_artifacts(here)
+    for bench, rules in GATED.items():
+        assert bench in arts, f"no committed baseline for gated '{bench}'"
+        for row in rules:
+            assert row in arts[bench], f"baseline {bench} lacks row '{row}'"
+
+
+def test_run_py_exits_nonzero_when_a_benchmark_raises(tmp_path):
+    """Bugfix: a raising benchmark must fail the run (exit nonzero), not
+    write its artifact — while later benchmarks still run and write theirs."""
+    calls = []
+
+    def ok():
+        from benchmarks.common import csv_row
+        calls.append("ok")
+        csv_row("fine", 1.0, "x=1")
+
+    def boom():
+        calls.append("boom")
+        raise RuntimeError("injected benchmark failure")
+
+    failures = bench_run.run_benches(
+        [("boom", boom), ("ok", ok)], only=None, out_dir=str(tmp_path))
+    assert [n for n, _ in failures] == ["boom"]
+    assert calls == ["boom", "ok"]          # later benchmarks still ran
+    assert not (tmp_path / "BENCH_boom.json").exists()
+    assert (tmp_path / "BENCH_ok.json").exists()
+    # and main()'s contract: failures -> nonzero exit status
+    assert bench_run.run_benches([("ok", ok)], None, str(tmp_path)) == []

@@ -55,6 +55,61 @@ def test_constrain_noop_without_mesh():
     assert shd.constrain(x, "batch", "embed") is x
 
 
+def test_probe_sharding_helpers():
+    """Single-device-safe checks of the mesh-parallel profiling helpers:
+    axis sizing, pad-to-shard-multiple arithmetic, and the replication
+    fallback when a mesh lacks the requested axis."""
+    import types
+    mesh = types.SimpleNamespace(shape={"probe": 4, "data": 2})
+    assert shd.probe_axis_size(None) == 1
+    assert shd.probe_axis_size(mesh, "probe") == 4
+    assert shd.probe_axis_size(mesh, "nope") == 1
+    assert shd.pad_to_shards(7, None) == 7
+    assert shd.pad_to_shards(0, mesh, "probe") == 0
+    assert shd.pad_to_shards(1, mesh, "probe") == 4
+    assert shd.pad_to_shards(7, mesh, "probe") == 8
+    assert shd.pad_to_shards(8, mesh, "probe") == 8
+
+    real = mk_mesh((1, 1), ("probe", "data"))
+    assert shd.probe_sharding(real, "probe").spec == P("probe")
+    assert shd.probe_sharding(real, "absent").spec == P()
+    assert shd.batch_sharding(real, "data").spec == P("data")
+    assert shd.replicated(real).spec == P()
+
+
+def test_flatten_arg_shardings():
+    """Per-argument prefix broadcasting onto the flat (args, kwargs) leaf
+    list: one prefix entry covers its whole argument subtree, a single
+    sharding broadcasts to positional leaves only, and kwargs leaves ALWAYS
+    replicate (a scalar kwarg must never inherit a rank-1 batch spec)."""
+    mesh = mk_mesh((1, 1), ("probe", "data"))
+    params = {"w1": 1, "w2": 2}        # leaf identity is all that matters
+    batch = {"x": 3, "y": 4}
+
+    flat = shd.flatten_arg_shardings(mesh, None, (params, batch), {})
+    assert [s.spec for s in flat] == [P()] * 4
+
+    flat = shd.flatten_arg_shardings(
+        mesh, [None, shd.batch_sharding(mesh, "data")], (params, batch), {})
+    assert [s.spec for s in flat] == [P(), P(), P("data"), P("data")]
+
+    # single sharding: positional leaves sharded, kwargs replicated
+    flat = shd.flatten_arg_shardings(
+        mesh, P("data"), (params,), {"scale": 5})
+    assert [s.spec for s in flat] == [P("data"), P("data"), P()]
+
+    # PartitionSpec entries resolve against the mesh; kwargs replicate
+    flat = shd.flatten_arg_shardings(
+        mesh, (P("data"), None), (params, batch), {"k": 0})
+    assert [s.spec for s in flat] == [P("data"), P("data"), P(), P(), P()]
+
+    assert shd.flatten_arg_shardings(None, None, (params,), {}) is None
+    import pytest as _pytest
+    with _pytest.raises(ValueError):
+        shd.flatten_arg_shardings(mesh, [None, None, None], (params, batch),
+                                  {})
+
+
 SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -1,0 +1,234 @@
+"""Mesh-parallel profiling (@spmd tier): sharded truncate_sweep /
+mem-mode / autosearch must be bit-for-bit consistent with the single-device
+path, and the sharded ladder must keep the O(1)-compile contract while
+putting >1 effective probe per dispatch on every device.
+
+Each test runs in a subprocess that forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, so the suite passes
+on any host; CI's `spmd` job additionally sets the flag at the job level.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.spmd
+
+
+def _run_subproc(code: str, timeout: int = 600) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, res.stderr[-4000:]
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+_PRELUDE = textwrap.dedent("""
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax import lax
+    from repro.core import (truncate, truncate_sweep, memtrace,
+                            TruncationPolicy, scope)
+    from repro.launch.mesh import make_probe_mesh, make_profile_mesh
+    from repro.distributed.sharding import batch_sharding
+    from repro import search
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    def _toy(w1, w2, x):
+        with scope("attn"):
+            h = jnp.tanh(x @ w1)
+        with scope("mlp"):
+            def body(c, _):
+                return jax.nn.relu(c @ w2), None
+            h, _ = lax.scan(body, h, None, length=3)
+        with scope("head"):
+            return jnp.mean(h * h)
+
+    r = np.random.RandomState(0)
+    args = (jnp.asarray(r.randn(32, 64) / 8, jnp.float32),
+            jnp.asarray(r.randn(64, 64) / 8, jnp.float32),
+            jnp.asarray(r.randn(16, 32), jnp.float32))
+""")
+
+
+def test_sharded_sweep_bit_for_bit_2x4_mesh():
+    """truncate_sweep on a (probe=2, data=4) mesh: every ladder width's
+    output must equal the single-device path bit-for-bit, including a K not
+    divisible by the probe axis (identity-padded, sliced back)."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        mesh = make_profile_mesh(2, 4)
+        site = TruncationPolicy.everywhere("e5m2")
+        pols = [TruncationPolicy.everywhere(f"e8m{m}")
+                for m in (15, 10, 7, 5, 3, 2)]
+        h0 = truncate_sweep(_toy, site)(*args)
+        h1 = truncate_sweep(_toy, site, mesh=mesh)(*args)
+        t6 = h0.tables(pols)
+        eq6 = bool(np.array_equal(jax.device_get(h0.batch(t6)),
+                                  jax.device_get(h1.batch(t6))))
+        t5 = h0.tables(pols[:5])   # K=5: not divisible by probe axis (2)
+        b5 = jax.device_get(h1.batch(t5))
+        eq5 = bool(np.array_equal(jax.device_get(h0.batch(t5)), b5))
+        singles = [float(h0(h0.table(p))) for p in pols[:5]]
+        print("RESULT" + json.dumps({
+            "eq6": eq6, "eq5": eq5, "k5": list(np.shape(b5)),
+            "singles_match": bool(np.allclose(singles, b5, rtol=0, atol=0)),
+        }))
+    """))
+    assert out["eq6"], "sharded ladder diverged from single-device"
+    assert out["eq5"], "identity-padded sharded ladder diverged"
+    assert out["k5"] == [5], "padding leaked into the output batch"
+    assert out["singles_match"]
+
+
+def test_raptor_report_reductions_2x4_mesh():
+    """Mem-mode exactness under data parallelism — the thing RAPTOR cannot
+    do (§6.3): (1) GSPMD path: memtrace with the batch sharded 4-way must
+    reproduce the single-device report bit-for-bit — including the
+    cross-shard mean, which XLA lowers to a global collective; (2)
+    shard_map path: per-shard reports of a per-example program reduced with
+    RaptorReport.allreduce (psum/pmax) must match the global report (a
+    shard_map body computes per-SHARD semantics, so this contract is for
+    programs whose sharded execution is a slice of the global one — batch
+    reductions belong on the GSPMD path); (3) host-side merge doubles
+    counts and keeps maxes."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_profile_mesh(2, 4)
+        pol = TruncationPolicy.everywhere("e5m2")
+        out0, rep0 = memtrace(_toy, pol)(*args)
+        sh = [None, None, batch_sharding(mesh, "data")]
+        out1, rep1 = memtrace(_toy, pol, mesh=mesh, in_shardings=sh)(*args)
+
+        def eqs(a, b):
+            return bool(np.array_equal(jax.device_get(a), jax.device_get(b)))
+
+        # shard_map lane: a PER-EXAMPLE program (no cross-batch reduction,
+        # so each shard's execution is exactly its slice of the global
+        # program); each shard runs mem-mode on its batch slice (the
+        # memtrace wrapper falls back to inline interpretation under the
+        # outer trace), then allreduces the report over the data axis
+        def _toy_ew(w1, w2, x):
+            with scope("attn"):
+                h = jnp.tanh(x @ w1)
+            with scope("mlp"):
+                def bd(c, _):
+                    return jax.nn.relu(c @ w2), None
+                h, _ = lax.scan(bd, h, None, length=3)
+            with scope("head"):
+                return h * h
+
+        _, rep_ew = memtrace(_toy_ew, pol)(*args)
+
+        def body(w1, w2, xs):
+            _, rep = memtrace(_toy_ew, pol)(w1, w2, xs)
+            return rep.allreduce("data")
+
+        rep2 = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), P(), P("data")),
+            out_specs=P(), check_rep=False)(*args)
+
+        merged = rep0.merge(rep1)
+        print("RESULT" + json.dumps({
+            "gspmd_flags": eqs(rep0.flags, rep1.flags),
+            "gspmd_max_rel": eqs(rep0.max_rel, rep1.max_rel),
+            "gspmd_ops": eqs(rep0.op_counts, rep1.op_counts),
+            "smap_flags": eqs(rep_ew.flags, rep2.flags),
+            "smap_max_rel": eqs(rep_ew.max_rel, rep2.max_rel),
+            "smap_ops": eqs(rep_ew.op_counts, rep2.op_counts),
+            "out_close": bool(np.allclose(float(out0), float(out1),
+                                          rtol=1e-6)),
+            "merge_flags": eqs(merged.flags,
+                               2 * jnp.asarray(rep0.flags)),
+            "merge_max": eqs(merged.max_rel, rep0.max_rel),
+            "n_loc": len(rep0.locations),
+            "any_flags": int(jax.device_get(rep0.flags).sum()) > 0,
+        }))
+    """))
+    for k in ("gspmd_flags", "gspmd_max_rel", "gspmd_ops", "smap_flags",
+              "smap_max_rel", "smap_ops", "out_close", "merge_flags",
+              "merge_max", "any_flags"):
+        assert out[k], (k, out)
+    assert out["n_loc"] >= 3
+
+
+def test_sharded_ladder_single_compile_multi_probe_per_device():
+    """Compile-cache contract under sharding: repeated sharded ladder
+    dispatches reuse ONE executable, and each dispatch evaluates more than
+    one probe per device (K=8 on a 4-device probe mesh -> 2/device)."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        from jax._src import test_util as _jtu
+        mesh = make_probe_mesh(4)
+        site = TruncationPolicy.everywhere("e5m2")
+        pols = [TruncationPolicy.everywhere(f"e8m{m}")
+                for m in (15, 10, 7, 5, 3, 2, 23, 11)]
+        handle = truncate_sweep(_toy, site, mesh=mesh)(*args)
+        tables = handle.tables(pols)
+        with _jtu.count_jit_compilation_cache_miss() as n:
+            a = jax.device_get(handle.batch(tables))
+            b = jax.device_get(handle.batch(handle.tables(pols[::-1])))
+        print("RESULT" + json.dumps({
+            "compiles": int(n[0]),
+            "k": len(pols), "ndev": 4,
+            "consistent": bool(np.array_equal(a, b[::-1])),
+        }))
+    """))
+    assert out["compiles"] == 1, f"sharded ladder recompiled: {out}"
+    assert out["k"] / out["ndev"] > 1, "fewer than 2 probes per device"
+    assert out["consistent"]
+
+
+def test_autosearch_mesh_matches_single_device_bench_model():
+    """Acceptance: autosearch on the bench model over an 8-device host
+    probe mesh returns the SAME per-scope assignments as the single-device
+    search, within the O(1) compile budget, with >1 effective probe per
+    compile-dispatch per device (widths ladder of 10 on 8 shards)."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        import sys, os
+        sys.path.insert(0, os.getcwd())
+        from jax._src import test_util as _jtu
+        from benchmarks.common import bench_model, bench_batch
+
+        cfg, model, params = bench_model()
+        batch = bench_batch(cfg)
+        widths = (23, 15, 12, 10, 8, 7, 6, 5, 3, 2)
+        r0 = search.autosearch(model.loss, (params, batch),
+                               search.loss_degradation, 48,
+                               threshold=5e-3, widths=widths)
+        mesh = make_probe_mesh()   # all 8 devices
+        with _jtu.count_jit_compilation_cache_miss() as n:
+            r1 = search.autosearch(model.loss, (params, batch),
+                                   search.loss_degradation, 48,
+                                   threshold=5e-3, widths=widths, mesh=mesh)
+        a0 = {p: [a.man_bits, a.excluded] for p, a in r0.assignments.items()}
+        a1 = {p: [a.man_bits, a.excluded] for p, a in r1.assignments.items()}
+        print("RESULT" + json.dumps({
+            "same": a0 == a1, "a0": a0, "a1": a1,
+            "compiles": int(n[0]),
+            "n_compiles": r1.n_compiles,
+            "converged": bool(r0.converged) and bool(r1.converged),
+            "evals": [r0.evals_used, r1.evals_used],
+            "budget_ok": r1.evals_used <= 48,
+            "ppd": r1.probes_per_dispatch_per_device,
+            "ndev": r1.n_devices,
+        }))
+    """), timeout=900)
+    assert out["same"], f"assignments diverged: {out['a0']} vs {out['a1']}"
+    assert out["converged"]
+    assert out["budget_ok"] and out["evals"][0] == out["evals"][1]
+    assert out["compiles"] <= 2, out
+    assert out["n_compiles"] <= 2
+    assert out["ndev"] == 8
+    assert out["ppd"] > 1, ("sharded ladder must batch >1 probe per device "
+                            f"per dispatch, got {out['ppd']}")
