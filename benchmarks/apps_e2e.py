@@ -1,0 +1,77 @@
+"""Mini-app end-to-end benchmark: solver throughput + search cost + oracle
+error on the three PDE workloads.
+
+Per app (Sod shock tube / 2D heat / CG Poisson):
+
+  * ``<app>_run``            — steady-state jit'd f32 trajectory wall time
+  * ``<app>_truncated_run``  — the same trajectory through the op-mode
+                               interpreter under the uniform-low policy
+                               (the profiling-overhead number, paper tab. 3)
+  * ``<app>_autosearch``     — full mixed-precision search wall time, with
+                               evals/compiles and the achieved oracle error
+                               in the derived column
+
+The oracle errors in ``derived`` track the scientific claim next to the
+perf trajectory: the searched assignment must stay inside the app budget
+while uniform-low busts it (asserted here too — a benchmark that stops
+demonstrating the claim fails loudly, same contract as benchmarks/run.py).
+
+    PYTHONPATH=src python -m benchmarks.apps_e2e
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, timeit
+from repro import search
+from repro.apps import get_app, oracle
+from repro.core import truncate
+
+
+def bench_app(name: str, budget: int = 32):
+    app = get_app(name)
+    state = app.init_state(jnp.float32)
+    ref64 = oracle.fp64_reference(app)
+
+    run = jax.jit(app.run_observables)
+    t_run, obs32 = timeit(run, state, warmup=1, iters=3)
+    floor = app.error_metric(ref64, obs32)
+    csv_row(f"{name}_run", t_run * 1e6,
+            f"steps={app.n_steps};floor={floor:.3e}")
+
+    tr = truncate(app.run_observables, app.uniform_policy())
+    t_tr, obs_uni = timeit(tr, state, warmup=1, iters=3)
+    err_uni = app.error_metric(ref64, obs_uni)
+    csv_row(f"{name}_truncated_run", t_tr * 1e6,
+            f"overhead={t_tr / t_run:.1f}x;uniform_err={err_uni:.3e}")
+
+    t0 = time.perf_counter()
+    res = search.autosearch(app.run_observables, (state,),
+                            metric=app.error_metric, budget=budget,
+                            threshold=app.search_threshold)
+    t_search = time.perf_counter() - t0
+    obs_mixed = truncate(app.run_observables, res.policy())(state)
+    err_mixed = app.error_metric(ref64, obs_mixed)
+    csv_row(f"{name}_autosearch", t_search * 1e6,
+            f"evals={res.evals_used};compiles={res.n_compiles}"
+            f";scopes={len(res.assignments)}"
+            f";mixed_err={err_mixed:.3e};budget={app.error_budget:.1e}")
+
+    assert res.converged, f"{name}: search did not converge\n{res.table()}"
+    assert err_mixed <= app.error_budget < err_uni, (
+        f"{name}: oracle ordering broken "
+        f"(mixed {err_mixed:.3e}, budget {app.error_budget:.1e}, "
+        f"uniform {err_uni:.3e})")
+    return res
+
+
+def run():
+    for name in ("sod", "heat", "poisson"):
+        bench_app(name)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,190 @@
+"""The uniform mini-app protocol the whole profiling stack runs on.
+
+RAPTOR's validation targets are real solvers (Flash-X Sod, Sedov, cellular
+detonation) judged on *solver-level observables* — conserved quantities and
+residual norms — not per-op deviations. :class:`MiniApp` captures exactly
+the surface the profiling/search stack needs from such a workload:
+
+  * ``init_state(dtype)``        — initial condition (a pytree of arrays)
+  * ``step(state)``              — one solver step (pure, traceable JAX)
+  * ``run(state)``               — the full trajectory (``lax.scan`` of steps)
+  * ``observables(state)``       — dict of physically meaningful quantities
+  * ``error_metric(ref, cand)``  — scalar "how wrong is this trajectory",
+                                   smaller is better, inf = inadmissible
+  * ``default_policy_scopes()``  — the named-scope regions truncation may
+                                   legitimately target
+
+Because ``run_observables`` is an ordinary traceable function of the state,
+``truncate``, ``truncate_sweep``, ``memtrace``, ``profile_counts`` and
+``autosearch(mesh=...)`` all apply to every app unmodified — the app's
+``error_metric`` plugs straight into ``autosearch(metric=...)`` via
+``search.metrics.resolve_metric``.
+
+Observable computations are deliberately left OUTSIDE any named scope: they
+are the measurement harness, not the workload, so scoped policies (and the
+scope frontier ``autosearch`` discovers) can never truncate them.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.api import scope
+from repro.core.policy import TruncationPolicy, TruncationRule
+from repro.core.formats import parse_format
+
+Observables = Dict[str, jnp.ndarray]
+
+_EPS = 1e-12
+# CG coefficient guard: keeps 0/0 out of alpha/beta once the residual hits
+# the rounding floor; small enough to be invisible at any probed precision
+_CG_EPS = 1e-30
+
+
+class MiniApp:
+    """Base class implementing the shared machinery of the protocol.
+
+    Subclasses provide ``init_state``/``step``/``observables`` (and usually
+    override ``error_metric``) plus the class attributes below. All solver
+    arithmetic must derive its dtype from the state so the same code runs
+    the f32 workload and the f64 oracle trajectory.
+    """
+
+    name: str = "?"
+    n_steps: int = 1
+    # acceptance threshold for error_metric(fp64 oracle, candidate) — the
+    # app's physics budget, calibrated in tests/conformance/test_apps_e2e.py
+    error_budget: float = 1e-2
+    # autosearch threshold on the app's own f32 self-metric; tighter than
+    # error_budget so "f32 floor + search slack" stays inside the budget
+    search_threshold: float = 1e-3
+    # the uniform-low-precision strawman a mixed assignment must beat
+    uniform_low: str = "e8m3"
+
+    # ---- protocol --------------------------------------------------------
+    def init_state(self, dtype=jnp.float32):
+        raise NotImplementedError
+
+    def step(self, state):
+        raise NotImplementedError
+
+    def observables(self, state) -> Observables:
+        raise NotImplementedError
+
+    def run(self, state):
+        """The full trajectory: ``n_steps`` solver steps under one scan, so
+        one jaxpr covers the whole run (scan trip counts multiply FLOPs in
+        scope discovery and the op-mode walkers recurse through the body)."""
+        def body(s, _):
+            return self.step(s), None
+
+        out, _ = lax.scan(body, state, None, length=self.n_steps)
+        return out
+
+    def run_observables(self, state) -> Observables:
+        """The profiled function of record: state -> solver observables."""
+        return self.observables(self.run(state))
+
+    def error_metric(self, ref_obs: Observables,
+                     cand_obs: Observables) -> float:
+        """Default: worst observable deviation — relative error for scalars,
+        relative L2 for fields (see :func:`observable_error`)."""
+        return observable_error(ref_obs, cand_obs)
+
+    def default_policy_scopes(self) -> Tuple[str, ...]:
+        raise NotImplementedError
+
+    # ---- conveniences ----------------------------------------------------
+    def uniform_policy(self, fmt=None) -> TruncationPolicy:
+        """Uniform low precision over every solver scope — the strawman the
+        searched mixed assignment is graded against. Scoped (not
+        ``everywhere``) so the observable harness itself stays exact."""
+        f = parse_format(fmt if fmt is not None else self.uniform_low)
+        return TruncationPolicy(rules=tuple(
+            TruncationRule(fmt=f, scope=s)
+            for s in self.default_policy_scopes()))
+
+    def __repr__(self) -> str:
+        return (f"<{type(self).__name__} {self.name!r} steps={self.n_steps} "
+                f"budget={self.error_budget:g}>")
+
+
+# --------------------------------------------------------------------------
+# observable comparison helpers
+# --------------------------------------------------------------------------
+
+def _host(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x)).astype(np.float64)
+
+
+def observable_error(ref_obs: Observables, cand_obs: Observables) -> float:
+    """Worst-key observable deviation: scalars compare by relative error,
+    fields by relative L2; a non-finite candidate against a finite reference
+    is infinitely wrong (a policy that overflows is never admissible)."""
+    if set(ref_obs) != set(cand_obs):
+        raise ValueError(f"observable keys differ: {sorted(ref_obs)} vs "
+                         f"{sorted(cand_obs)}")
+    worst = 0.0
+    for key in ref_obs:
+        r, c = _host(ref_obs[key]), _host(cand_obs[key])
+        if np.all(np.isfinite(r)) and not np.all(np.isfinite(c)):
+            return float("inf")
+        if r.ndim == 0 or r.size == 1:
+            d = abs(float(c.ravel()[0]) - float(r.ravel()[0])) \
+                / (abs(float(r.ravel()[0])) + _EPS)
+        else:
+            d = float(np.linalg.norm((c - r).ravel())
+                      / (np.linalg.norm(r.ravel()) + _EPS))
+        worst = max(worst, d)
+    return worst
+
+
+# --------------------------------------------------------------------------
+# shared conjugate-gradient building blocks (heat implicit path + poisson)
+# --------------------------------------------------------------------------
+
+def _dot(a, b):
+    return jnp.sum(a * b)
+
+
+def cg_iteration(matvec, x, r, p):
+    """One textbook CG iteration under the standard scope split: ``matvec``
+    (the stencil — the FLOPs bulk), ``coeffs`` (the two global reductions —
+    small but famously precision-critical), ``update`` (axpys)."""
+    with scope("matvec"):
+        Ap = matvec(p)
+    with scope("coeffs"):
+        rs = _dot(r, r)
+        alpha = rs / (_dot(p, Ap) + jnp.asarray(_CG_EPS, x.dtype))
+    with scope("update"):
+        x = x + alpha * p
+        r_new = r - alpha * Ap
+    with scope("coeffs"):
+        beta = _dot(r_new, r_new) / (rs + jnp.asarray(_CG_EPS, x.dtype))
+    with scope("update"):
+        p = r_new + beta * p
+    return x, r_new, p
+
+
+def cg_solve(matvec, b, x0, iters: int):
+    """Fixed-iteration CG (deterministic op count: the iteration count is
+    part of the workload definition, exactly like a solver's max-iters)."""
+    r0 = b - matvec(x0)
+
+    def body(carry, _):
+        x, r, p = carry
+        return cg_iteration(matvec, x, r, p), None
+
+    (x, r, p), _ = lax.scan(body, (x0, r0, r0), None, length=iters)
+    return x
+
+
+__all__ = [
+    "MiniApp", "Observables", "observable_error",
+    "cg_iteration", "cg_solve",
+]

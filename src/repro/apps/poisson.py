@@ -1,0 +1,101 @@
+"""Conjugate-gradient Poisson solver with a residual-norm observable.
+
+``A u = b`` for the 5-point Dirichlet Laplacian on the unit square, with
+``b`` manufactured from a smooth discrete solution ``u* = sin(pi x) sin(pi
+y) + half-frequency detail`` so the exact discrete answer is known. One
+protocol ``step`` is one CG iteration (the state carries ``x, r, p, b``),
+so ``run`` is the familiar fixed-iteration Krylov loop under one scan.
+
+Precision story: the *recurrence* residual ``r`` in low precision drifts
+away from the *true* residual ``b - A x`` — the canonical mixed-precision
+CG failure mode. The observables therefore recompute the true relative
+residual (outside any truncatable scope) next to the solution field: a
+policy can only pass by actually converging, not by lying in its carried
+residual. ``error_metric`` adds a residual-excess term so that any
+candidate whose true residual misses the app's convergence tolerance is
+over budget even if its field error happens to be small.
+
+Scopes: ``poisson/matvec`` (stencil — FLOPs bulk), ``poisson/coeffs`` (the
+two global reductions — precision-critical), ``poisson/update`` (axpys).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.apps.base import MiniApp, Observables, cg_iteration, _host, _EPS
+from repro.core.api import scope
+from repro.search.metrics import rel_l2_error
+
+
+def _lap_dirichlet(u):
+    """5-point ``-Laplacian`` (SPD) in grid units with zero Dirichlet BC."""
+    up = jnp.pad(u, 1)
+    return (4.0 * u - up[:-2, 1:-1] - up[2:, 1:-1]
+            - up[1:-1, :-2] - up[1:-1, 2:])
+
+
+class PoissonCG(MiniApp):
+    name = "poisson"
+    error_budget = 2e-2
+    search_threshold = 5e-3
+    uniform_low = "e8m3"
+    # convergence tolerance on the TRUE relative residual ||b - A x|| / ||b||
+    # (f32 CG on this problem reaches ~1e-6; an admissible truncated run may
+    # stall earlier but must still genuinely converge to this tolerance)
+    residual_tol = 1e-3
+
+    def __init__(self, n: int = 32, cg_iters: int = 48):
+        self.n = int(n)
+        self.n_steps = int(cg_iters)
+
+    # ---- protocol --------------------------------------------------------
+    def init_state(self, dtype=jnp.float32):
+        """CG state ``(x, r, p, b)`` with x0 = 0, f64-computed b rounded
+        through f32 (see SodShockTube) so every precision runs the same
+        right-hand side bits."""
+        n = self.n
+        xy = (np.arange(n, dtype=np.float64) + 1.0) / (n + 1.0)
+        X, Y = np.meshgrid(xy, xy, indexing="ij")
+        u_star = (np.sin(np.pi * X) * np.sin(np.pi * Y)
+                  + 0.25 * np.sin(2 * np.pi * X) * np.sin(2 * np.pi * Y))
+        up = np.pad(u_star, 1)
+        b = (4.0 * u_star - up[:-2, 1:-1] - up[2:, 1:-1]
+             - up[1:-1, :-2] - up[1:-1, 2:])
+        b = jnp.asarray(b.astype(np.float32), dtype)
+        x0 = jnp.zeros_like(b)
+        return (x0, b, b, b)  # x, r = b - A*0, p = r, b
+
+    def step(self, state):
+        x, r, p, b = state
+        with scope("poisson"):
+            x, r, p = cg_iteration(_lap_dirichlet, x, r, p)
+        return (x, r, p, b)
+
+    def observables(self, state) -> Observables:
+        x, _r, _p, b = state
+        # TRUE residual, recomputed outside every policy scope: the carried
+        # recurrence residual _r is part of the (truncatable) workload and
+        # must never be the convergence judge
+        res = b - _lap_dirichlet(x)
+        rel_res = (jnp.sqrt(jnp.sum(res * res))
+                   / (jnp.sqrt(jnp.sum(b * b)) + _EPS))
+        return {"rel_residual": rel_res, "solution": x}
+
+    def error_metric(self, ref_obs: Observables,
+                     cand_obs: Observables) -> float:
+        """Field rel-L2 plus a residual-excess term: exceeding the app's
+        convergence tolerance scales the metric past 1 regardless of how the
+        reference's own (possibly tiny) residual compares."""
+        field = rel_l2_error(ref_obs["solution"], cand_obs["solution"])
+        res_c = float(_host(cand_obs["rel_residual"]))
+        if not np.isfinite(res_c):
+            return float("inf")
+        excess = max(0.0, res_c - self.residual_tol) / self.residual_tol
+        return max(field, excess)
+
+    def default_policy_scopes(self) -> Tuple[str, ...]:
+        return ("poisson/matvec", "poisson/coeffs", "poisson/update")

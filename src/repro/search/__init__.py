@@ -5,11 +5,13 @@ from repro.search.driver import (
 )
 from repro.search.scopes import discover_scopes, scope_tree, ScopeInfo
 from repro.search.metrics import (
-    rel_error, mean_rel_error, loss_degradation, default_metric,
+    rel_error, mean_rel_error, rel_l2_error, loss_degradation,
+    default_metric, resolve_metric, from_observables, NAMED_METRICS,
 )
 
 __all__ = [
     "autosearch", "SearchResult", "ScopeAssignment", "DEFAULT_WIDTHS",
     "discover_scopes", "scope_tree", "ScopeInfo",
-    "rel_error", "mean_rel_error", "loss_degradation", "default_metric",
+    "rel_error", "mean_rel_error", "rel_l2_error", "loss_degradation",
+    "default_metric", "resolve_metric", "from_observables", "NAMED_METRICS",
 ]

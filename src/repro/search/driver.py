@@ -122,7 +122,7 @@ class SearchResult:
 
 
 def autosearch(fn: Callable, args: Sequence = (),
-               metric: Optional[Callable] = None, budget: int = 64, *,
+               metric: _metrics.MetricSpec = None, budget: int = 64, *,
                kwargs: Optional[dict] = None, threshold: float = 1e-3,
                widths: Sequence[int] = DEFAULT_WIDTHS, exp_bits: int = 8,
                scopes: Optional[Sequence[ScopeInfo]] = None,
@@ -134,12 +134,16 @@ def autosearch(fn: Callable, args: Sequence = (),
     """Search a per-scope mixed-precision assignment for ``fn(*args)``.
 
     Returns a :class:`SearchResult`; ``result.policy()`` is directly usable
-    with ``api.truncate``. ``metric(ref_out, cand_out) -> float`` defaults to
-    the max relative output deviation; ``budget`` caps the total number of
-    candidate evaluations. All candidates are evaluated through a single
-    runtime-parameterized executable (probing every ladder width of a region
-    in one vmapped call), so the search performs O(1) XLA compilations
-    regardless of budget, scope count, or ladder length.
+    with ``api.truncate``. ``metric`` is resolved via
+    ``metrics.resolve_metric``: ``None`` (max relative output deviation, the
+    historical default), a registered name (``"max_rel"``, ``"mean_rel"``,
+    ``"rel_l2"``, ``"loss"``), or any ``metric(ref_out, cand_out) -> float``
+    callable — e.g. a mini-app's solver-level ``error_metric`` over
+    observables. ``budget`` caps the total number of candidate evaluations.
+    All candidates are evaluated through a single runtime-parameterized
+    executable (probing every ladder width of a region in one vmapped
+    call), so the search performs O(1) XLA compilations regardless of
+    budget, scope count, or ladder length.
 
     ``mesh`` shards the candidate batches of BOTH phases — per-scope ladder
     probes and greedy-exclusion rounds — across ``mesh.shape[batch_axis]``
@@ -156,7 +160,7 @@ def autosearch(fn: Callable, args: Sequence = (),
     sweep executable instead of compiling a shadow computation).
     """
     del memflag_threshold  # legacy knob of the mem-mode ranking pass
-    metric = metric or _metrics.default_metric
+    metric = _metrics.resolve_metric(metric)
     kwargs = dict(kwargs or {})
     # index 0 of the ladder must always be full precision: scopes the search
     # never validates (budget exhaustion, all-rejected probes) are assigned

@@ -4,8 +4,20 @@ A metric is any ``metric(ref_out, cand_out) -> float`` where smaller is
 better and the search threshold bounds it. ``ref_out``/``cand_out`` are the
 full pytree outputs of the profiled function (full-precision vs candidate
 policy).
+
+``autosearch`` (and the app oracle layer) resolve their ``metric`` argument
+through :func:`resolve_metric`, so a metric may be supplied as
+
+  * ``None``                  — the default (max elementwise relative error),
+  * a registered name         — ``"max_rel"``, ``"mean_rel"``, ``"rel_l2"``,
+                                ``"loss"``,
+  * any callable              — e.g. a mini-app's solver-level
+                                ``error_metric`` over observables, or
+  * :func:`from_observables`  — lift an observable map over raw outputs.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional, Union
 
 import numpy as np
 
@@ -51,6 +63,26 @@ def loss_degradation(ref_out, cand_out) -> float:
     return float(np.abs(c[0] - r[0]) / max(np.abs(r[0]), _EPS))
 
 
+def rel_l2_error(ref_out, cand_out) -> float:
+    """Worst per-leaf relative L2 deviation ||c - r||_2 / ||r||_2 — the
+    field-level metric of the PDE mini-apps (a solution profile is judged as
+    a whole, not by its worst cell). Scalar leaves degrade to the plain
+    relative error; a non-finite candidate where the reference is finite is
+    infinitely wrong."""
+    worst = 0.0
+    for r, c in zip(_leaves(ref_out), _leaves(cand_out)):
+        r = r.astype(np.float64, copy=False)
+        c = c.astype(np.float64, copy=False)
+        if r.size == 0:
+            continue
+        if np.all(np.isfinite(r)) and not np.all(np.isfinite(c)):
+            return float("inf")
+        num = float(np.linalg.norm((c - r).ravel()))
+        den = float(np.linalg.norm(r.ravel()))
+        worst = max(worst, num / (den + _EPS))
+    return worst
+
+
 def mean_rel_error(ref_out, cand_out) -> float:
     """Mean (not max) relative deviation — a softer target for noisy
     workloads where a handful of tiny denominators shouldn't veto."""
@@ -68,3 +100,53 @@ def mean_rel_error(ref_out, cand_out) -> float:
 
 
 default_metric = rel_error
+
+# names accepted anywhere a metric argument is resolved (autosearch, the
+# app oracle layer, benchmarks); "max_rel" documents what the default was
+# before metrics became user-suppliable
+NAMED_METRICS = {
+    "max_rel": rel_error,
+    "rel": rel_error,
+    "mean_rel": mean_rel_error,
+    "rel_l2": rel_l2_error,
+    "loss": loss_degradation,
+}
+
+MetricSpec = Union[None, str, Callable]
+
+
+def resolve_metric(metric: MetricSpec = None) -> Callable:
+    """Resolve a user-supplied metric spec to a callable.
+
+    ``None`` keeps the historical behavior (max elementwise relative error);
+    a string looks up :data:`NAMED_METRICS`; a callable — e.g. a mini-app's
+    ``error_metric`` over solver observables — passes through unchanged."""
+    if metric is None:
+        return default_metric
+    if callable(metric):
+        return metric
+    if isinstance(metric, str):
+        try:
+            return NAMED_METRICS[metric]
+        except KeyError:
+            raise ValueError(
+                f"unknown metric name {metric!r}; "
+                f"known: {sorted(NAMED_METRICS)}") from None
+    raise TypeError(
+        f"metric must be None, a name, or a callable, got {type(metric)}")
+
+
+def from_observables(observables_fn: Callable,
+                     metric: MetricSpec = None) -> Callable:
+    """Lift a ``state -> observables`` map into a search metric over raw
+    profiled-function outputs: both outputs are mapped to their solver-level
+    observables and compared there. This is how an app whose profiled
+    function returns raw state (instead of observables) still searches
+    against physically meaningful quantities."""
+    inner = resolve_metric(metric)
+
+    def obs_metric(ref_out, cand_out) -> float:
+        return inner(observables_fn(ref_out), observables_fn(cand_out))
+
+    obs_metric.__name__ = f"from_observables({getattr(observables_fn, '__name__', '?')})"
+    return obs_metric

@@ -1,0 +1,112 @@
+"""Independent bit-level quantization oracle (exact integer arithmetic).
+
+The production quantizer (``repro.kernels.quantize_em.ref``) rounds with a
+carrier-grid bit trick plus lane-wise ``where`` gates. This oracle takes a
+deliberately different route so the two can cross-examine each other:
+
+  * decompose each f32 into an exact integer significand and exponent,
+  * round-to-nearest-even by integer divmod onto the target grid
+    (normal ulp ``2^(E-m)``, subnormal ulp ``2^(min_exp-m)``),
+  * reconstruct the result exactly via ``ldexp`` in f64,
+  * apply the overflow convention (saturate / IEEE inf / fn-NaN) by
+    comparing against the exact ``max_finite``.
+
+Semantics mirror the documented contract of ``quantize_ref``: two-stage
+rounding (RNE on the unbounded grid first, THEN the overflow check against
+``max_finite``), NaN/Inf/±0 pass-through, and input-magnitude selection of
+the subnormal path (``|x| < min_normal``). Valid for f32 inputs and targets
+with ``exp_bits <= 8`` and ``1 <= man_bits <= 23`` — the whole
+search/profiling format space on the f32 carrier. ``man_bits == 0`` is
+excluded by design: with a single-significand grid "ties to even" is
+convention-dependent (the implementation ties on carrier-encoding parity,
+grid-units parity would differ at every half-way power of two), and no
+ladder rung or hardware format is m=0.
+
+Everything is numpy int64/float64; no jax, no shared code with the
+implementation under test.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def format_constants(e: int, m: int, ieee_inf: bool):
+    """(bias, min_exp, max_exp, max_finite) of the (e, m) target, exact."""
+    bias = (1 << (e - 1)) - 1
+    min_exp = 1 - bias
+    max_exp = (1 << e) - (2 if ieee_inf else 1) - bias
+    top_sig = (1 << (m + 1)) - (1 if ieee_inf else 2)  # in units of 2^-m
+    max_finite = float(np.ldexp(np.float64(top_sig), max_exp - m))
+    return bias, min_exp, max_exp, max_finite
+
+
+def oracle_quantize(x, e: int, m: int, saturate: bool, ieee_inf: bool):
+    """Quantize a float32 array onto the (e, m) grid; returns float32.
+
+    Exact-integer RNE, independent of the jax implementation (see module
+    docstring). Requires ``1 <= e <= 8`` and ``1 <= m <= 23``.
+    """
+    if not (1 <= e <= 8 and 1 <= m <= 23):
+        raise ValueError(f"oracle domain is e<=8, 1<=m<=23, got e{e}m{m}")
+    x = np.asarray(x, np.float32)
+    bits = x.view(np.uint32).astype(np.int64)
+    sign = (bits >> 31) & 1
+    efield = (bits >> 23) & 0xFF
+    mfield = bits & 0x7FFFFF
+    special = efield == 255                       # nan / inf pass through
+    is_zero = (efield == 0) & (mfield == 0)
+
+    # exact value = sig * 2^(E - 23); f32 subnormals have E = -126, sig < 2^23
+    sig = np.where(efield > 0, mfield | (1 << 23), mfield)
+    E = np.where(efield > 0, efield.astype(np.int64) - 127,
+                 np.int64(-126))
+
+    _, min_exp, _, max_finite = format_constants(e, m, ieee_inf)
+
+    # target ulp exponent: normal 2^(E-m) when |x| >= 2^min_exp, else the
+    # fixed subnormal spacing 2^(min_exp - m)
+    subnormal = E < min_exp
+    t = np.where(subnormal, np.int64(min_exp - m), E - m)
+    # units on the target grid: sig * 2^((E-23) - t), always a right shift
+    # for m <= 23; shifts past 62 cannot round up (sig < 2^24 << half) and
+    # are clamped to keep int64 shifts defined
+    s = np.minimum((E - 23 - t) * -1, 62)
+    s = np.maximum(s, 0)
+    d = np.left_shift(np.int64(1), s)
+    q, r = np.divmod(sig, d)
+    half = d >> 1
+    round_up = (r > half) | ((r == half) & (half > 0) & ((q & 1) == 1))
+    n = q + round_up.astype(np.int64)
+
+    # exact reconstruction (n <= 2^24, |t| <= 149: exact in f64, and the
+    # result lies on the f32 grid so the final cast is exact too)
+    mag = np.ldexp(n.astype(np.float64), t)
+
+    ovf = mag > max_finite
+    if saturate:
+        mag = np.where(ovf, max_finite, mag)
+    elif ieee_inf:
+        mag = np.where(ovf, np.inf, mag)
+
+    out = np.where(sign == 1, -mag, mag)
+    if not saturate and not ieee_inf:
+        # fn-layout overflow is the canonical (positive) NaN for either
+        # sign, matching the implementation's unsigned NaN constant
+        out = np.where(ovf, np.nan, out)
+    with np.errstate(over="ignore"):
+        # e8 targets can round the top f32 binade up to 2^128: exactly the
+        # carrier's own overflow-to-inf, not an oracle error
+        out = out.astype(np.float32)
+    # ±0 and specials keep their input bits (incl. NaN payload, -0 sign)
+    out_bits = out.view(np.uint32).copy()
+    passthru = special | is_zero
+    out_bits[passthru] = x.view(np.uint32)[passthru]
+    return out_bits.view(np.float32)
+
+
+def all_float16_values() -> np.ndarray:
+    """Every f16 bit pattern, exactly widened to f32 (the exhaustive
+    conformance input space: 65536 values covering normals, subnormals,
+    ±0, ±inf and every NaN payload)."""
+    return np.arange(1 << 16, dtype=np.uint16).view(np.float16) \
+        .astype(np.float32)

@@ -1,0 +1,64 @@
+"""Shared conformance-harness utilities: bitwise assertions that dump a
+machine-readable reproducer artifact on mismatch.
+
+On any oracle disagreement the failing inputs/outputs are written as an
+``.npz`` into ``$RAPTOR_ARTIFACTS_DIR`` (default ``conformance-artifacts/``)
+before the assertion fires — CI uploads the directory on failure, so a
+nightly red run always carries the exact bit patterns needed to replay it:
+
+    data = np.load("mismatch-<tag>.npz")
+    x = data["x_bits"].view(np.float32)          # the offending inputs
+    # data["fmt"] = [exp_bits, man_bits, saturate, ieee_inf]
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import numpy as np
+
+
+def artifact_dir() -> str:
+    return os.environ.get("RAPTOR_ARTIFACTS_DIR", "conformance-artifacts")
+
+
+def dump_artifact(name: str, **arrays) -> str:
+    """Write arrays as ``<artifact_dir>/<name>.npz``; returns the path."""
+    out = artifact_dir()
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{re.sub(r'[^A-Za-z0-9_.-]', '_', name)}.npz")
+    np.savez(path, **arrays)
+    return path
+
+
+def assert_bits_equal(tag: str, x, got, want, fmt=None, max_show: int = 5,
+                      nan_payload_free: bool = False):
+    """Bitwise equality of two f32 arrays; on mismatch, dump a reproducer
+    npz (input bits, both result sides, the format row) and fail with the
+    first few offending values + the artifact path.
+
+    ``nan_payload_free=True`` relaxes only NaN *payload* bits (positions
+    where both sides are NaN count as equal) — for legs that cross a
+    hardware cast (``astype`` convert pairs, ml_dtypes) which canonicalize
+    payloads; NaN-ness itself, infinities and zero signs stay bit-strict."""
+    x = np.asarray(x, np.float32)
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    gb, wb = got.view(np.uint32), want.view(np.uint32)
+    differ = gb != wb
+    if nan_payload_free:
+        differ &= ~(np.isnan(got) & np.isnan(want))
+    bad = np.nonzero(differ)[0]
+    if bad.size == 0:
+        return
+    path = dump_artifact(
+        f"mismatch-{tag}",
+        x_bits=x.view(np.uint32)[bad],
+        got_bits=gb[bad],
+        want_bits=wb[bad],
+        fmt=np.asarray(fmt if fmt is not None else [], np.int32))
+    sample = [(hex(int(x.view(np.uint32)[i])), float(x[i]),
+               float(got[i]), float(want[i])) for i in bad[:max_show]]
+    raise AssertionError(
+        f"[{tag}] {bad.size} bitwise mismatches "
+        f"(x_bits, x, got, want): {sample}; reproducer -> {path}")

@@ -1,0 +1,136 @@
+"""End-to-end precision profiling on the PDE mini-apps vs the FP64 oracle.
+
+The acceptance contract of the suite, per app (Sod shock tube, 2D heat
+diffusion, CG Poisson):
+
+  * ``autosearch`` with the app's solver-level ``error_metric`` converges
+    within budget and returns a genuinely mixed assignment;
+  * applying the searched policy keeps the app inside its FP64-oracle
+    error budget (conserved-quantity drift / field L2 / residual norm);
+  * the searched assignment strictly beats the uniform-low-precision
+    strawman, which itself must bust the budget (the paper's core claim:
+    per-region assignment reaches precision that uniform truncation
+    cannot);
+  * ``truncate_sweep`` evaluates candidate policies on the apps bit-for-bit
+    identically to per-policy ``truncate``.
+
+On a budget failure the observables and search table are dumped as an
+artifact so a nightly red run carries its own reproducer.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import search
+from repro.apps import get_app, oracle
+from repro.core import truncate, truncate_sweep, TruncationPolicy
+from harness import dump_artifact
+
+pytestmark = pytest.mark.conformance
+
+APP_NAMES = ["sod", "heat", "poisson"]
+SEARCH_BUDGET = 32
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(name):
+    """One shared (app, f32 state, fp64 oracle obs, search result) per app —
+    the expensive pieces every test in this module grades against."""
+    app = get_app(name)
+    state = app.init_state(jnp.float32)
+    ref64 = tuple(sorted(oracle.fp64_reference(app).items()))
+    res = search.autosearch(app.run_observables, (state,),
+                            metric=app.error_metric, budget=SEARCH_BUDGET,
+                            threshold=app.search_threshold)
+    return app, state, dict(ref64), res
+
+
+def _leaves_bits(tree):
+    return [np.asarray(jax.device_get(l)).view(np.uint32)
+            for l in jax.tree_util.tree_leaves(tree)]
+
+
+@pytest.mark.parametrize("name", APP_NAMES)
+def test_autosearch_converges_mixed(name):
+    app, _state, _ref, res = _setup(name)
+    assert res.converged, res.table()
+    assert res.evals_used <= SEARCH_BUDGET
+    assert res.n_compiles <= 1, "search must stay O(1)-compile on the apps"
+    # a *mixed* assignment: something truncated, per-scope widths free to
+    # differ (not a uniform policy in disguise is checked by the beats-
+    # uniform test below)
+    assert len(res.policy().rules) >= 1, res.table()
+
+
+@pytest.mark.parametrize("name", APP_NAMES)
+def test_autosearch_meets_oracle_budget(name):
+    """The searched policy keeps the app inside its FP64-oracle budget."""
+    app, state, ref64, res = _setup(name)
+    obs = truncate(app.run_observables, res.policy())(state)
+    v = oracle.verdict(app, obs, ref64)
+    if not v.passed:
+        path = dump_artifact(
+            f"app-budget-{name}",
+            **{f"obs_{k}": np.asarray(jax.device_get(x))
+               for k, x in obs.items()})
+        pytest.fail(f"{v}\n{res.table()}\nreproducer -> {path}")
+    # the searched policy must not ride on the f32 floor alone: the budget
+    # has to have real headroom left (otherwise the thresholds are mistuned
+    # and the test is vacuous)
+    assert v.floor <= app.error_budget / 10.0, v
+
+
+@pytest.mark.parametrize("name", APP_NAMES)
+def test_mixed_beats_uniform_low(name):
+    """Uniform low precision busts the budget; the searched mixed
+    assignment strictly beats it on the oracle metric."""
+    app, state, ref64, res = _setup(name)
+    obs_mixed = truncate(app.run_observables, res.policy())(state)
+    obs_uni = truncate(app.run_observables, app.uniform_policy())(state)
+    err_mixed = oracle.oracle_error(app, obs_mixed, ref64)
+    err_uni = oracle.oracle_error(app, obs_uni, ref64)
+    assert err_uni > app.error_budget, (
+        f"uniform {app.uniform_low} unexpectedly fits the budget "
+        f"({err_uni:.3e} <= {app.error_budget:.1e}) — strawman mistuned")
+    assert err_mixed <= app.error_budget
+    assert err_mixed < err_uni
+
+
+@pytest.mark.parametrize("name", APP_NAMES)
+def test_truncate_sweep_bitwise_parity_on_app(name):
+    """The zero-recompile sweep path reproduces per-policy truncate
+    bit-for-bit on a real solver trajectory (scan + stencils + reductions),
+    for a ladder of uniform policies over the app's scopes."""
+    app, state, _ref, _res = _setup(name)
+    site_policy = TruncationPolicy(rules=tuple(
+        search.driver.TruncationRule(fmt=search.driver.FPFormat(8, 0),
+                                     scope=s)
+        for s in app.default_policy_scopes()))
+    handle = truncate_sweep(app.run_observables, site_policy)(state)
+    ladder = [app.uniform_policy(f"e8m{m}") for m in (10, 5, 3)]
+    batched = handle.batch(handle.tables(ladder))
+    for k, pol in enumerate(ladder):
+        row = jax.tree_util.tree_map(lambda a, k=k: a[k], batched)
+        direct = truncate(app.run_observables, pol)(state)
+        for rb, db in zip(_leaves_bits(row), _leaves_bits(direct)):
+            assert np.array_equal(rb, db), (name, pol.rules[0].fmt.key)
+
+
+@pytest.mark.parametrize("name", APP_NAMES)
+def test_memtrace_flags_truncated_scopes(name):
+    """mem-mode on the uniform-low policy attributes flags to the app's
+    solver scopes (the heatmap the paper debugging flow starts from)."""
+    from repro.core import memtrace
+
+    app, state, _ref, _res = _setup(name)
+    _out, rep = memtrace(app.run_observables, app.uniform_policy(),
+                         threshold=1e-3)(state)
+    flags = np.asarray(jax.device_get(rep.flags))
+    assert flags.sum() > 0, rep.summary()
+    locs = " ".join(rep.locations)
+    root = app.default_policy_scopes()[0].split("/")[0]
+    assert root in locs, rep.summary()
