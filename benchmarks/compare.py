@@ -30,6 +30,7 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import sys
 
@@ -61,6 +62,14 @@ GATED = {
     "search_sharded": {
         "sharded_sweep_dev1": "lower",
     },
+    "instability_profile": {
+        # the paired-eval interpreter paths this repo owns: plain shadow
+        # execution and the tentpole's per-step trajectory accumulation.
+        # The warm-start walls stay ungated (compile-dominated); their
+        # dispatch/eval reductions are asserted inside the benchmark.
+        "heat_memtrace_run": "lower",
+        "heat_trajectory_run": "lower",
+    },
 }
 
 # (benchmark, row) whose fresh/baseline ratio measures the MACHINE, not the
@@ -78,13 +87,23 @@ CAL_THRESHOLD = 3.0  # limit 4x: catches a broken kernel, not a slower runner
 
 
 def load_artifacts(dirpath: str) -> dict:
+    """Load ``BENCH_*.json`` artifacts to ``{bench: {row: us_per_call}}``.
+
+    Freshly-added or hand-edited artifacts may carry rows without a
+    ``name``/``us_per_call`` (derived-only rows) or with non-numeric
+    values; those rows are skipped with a note instead of KeyError/
+    ValueError-crashing the whole gate."""
     out = {}
     for path in sorted(glob.glob(os.path.join(dirpath, "BENCH_*.json"))):
         with open(path) as f:
             data = json.load(f)
         name = data.get("benchmark") or os.path.basename(path)[6:-5]
-        rows = {r["name"]: float(r["us_per_call"])
-                for r in data.get("rows", [])}
+        rows = {}
+        for r in data.get("rows", []):
+            try:
+                rows[r["name"]] = float(r["us_per_call"])
+            except (KeyError, TypeError, ValueError):
+                print(f"  {name}: skipping malformed row {r!r}")
         out[name] = rows
     return out
 
@@ -132,8 +151,17 @@ def compare(baselines: dict, fresh: dict, threshold: float,
                                 f"fresh artifact")
                 continue
             base, new = base_rows[row], fresh_rows[row]
-            if base <= 0:
-                log(f"  {bench}/{row}: non-positive baseline — skipped")
+            # a zero/negative/NaN baseline means the metric did not exist
+            # when the baseline was committed (freshly-added benchmark or
+            # placeholder row): no gate, warn — refresh the baseline to arm
+            # it. Dividing by it would ZeroDivisionError/teach nonsense.
+            if not math.isfinite(base) or base <= 0:
+                log(f"  {bench}/{row}: no usable baseline ({base!r}) — "
+                    f"not gated, refresh benchmarks/baselines to arm")
+                continue
+            if not math.isfinite(new):
+                failures.append(f"{bench}/{row}: fresh value {new!r} is not "
+                                f"finite")
                 continue
             is_cal = calibration is not None and (bench, row) == calibration
             limit = CAL_THRESHOLD if is_cal else threshold
@@ -151,6 +179,11 @@ def compare(baselines: dict, fresh: dict, threshold: float,
                 f"{verdict}  [{status}]{note}")
             if bad:
                 failures.append(f"{bench}/{row}: {verdict}")
+    # a freshly-added gated benchmark whose baseline is not committed yet
+    # must not crash (KeyError) or silently pass unmentioned: no gate, warn
+    for bench in sorted(set(gated) & set(fresh) - set(baselines)):
+        log(f"  {bench}: gated but no committed baseline — not gated, "
+            f"commit BENCH_{bench}.json to benchmarks/baselines to arm")
     return failures
 
 

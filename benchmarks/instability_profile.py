@@ -1,0 +1,114 @@
+"""Instability-profiling benchmark: trajectory overhead vs plain shadow
+execution, and the error-guided warm start's probe/dispatch reduction.
+
+Rows:
+
+  * ``heat_memtrace_run``    — steady-state paired (truncated, shadow) run
+                               of the heat mini-app under plain mem-mode
+  * ``heat_trajectory_run``  — the same run with per-step trajectory ring
+                               buffers (the tentpole's added cost; derived
+                               carries the overhead ratio)
+  * ``bench_autosearch_unguided`` — full-ladder search on the bench model
+  * ``bench_profile_trajectory``  — the one-off profiling run feeding hints
+  * ``bench_autosearch_warm``     — the warm-started search; derived
+                               carries dispatch/eval counts and the
+                               reduction percentages
+
+The scientific claim rides in the assertions (same contract as
+benchmarks/apps_e2e.py): the warm-started search must reproduce the
+unguided assignments with strictly fewer probe dispatches, or the
+benchmark fails loudly.
+
+    PYTHONPATH=src python -m benchmarks.instability_profile
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import csv_row, timeit, bench_model, bench_batch
+from repro import search
+from repro.apps import get_app
+from repro.core import memtrace, profile_trajectory, TruncationPolicy
+from repro.core.api import TruncationRule
+from repro.core.formats import FPFormat
+from repro.profile import ladder_hints
+
+
+def bench_trajectory_overhead():
+    app = get_app("heat", n=16, n_explicit=32, n_implicit=2, cg_iters=12)
+    state = app.init_state()
+    pol = app.uniform_policy(app.probe_format)
+
+    mem = memtrace(app.run_observables, pol, app.search_threshold)
+    t_mem, (_, rep) = timeit(mem, state, warmup=1, iters=3)
+    csv_row("heat_memtrace_run", t_mem * 1e6,
+            f"n_loc={len(rep.locations)};steps={app.n_steps}")
+
+    traj_fn = profile_trajectory(app.run_observables, pol,
+                                 app.search_threshold,
+                                 n_steps=app.n_steps + 1)
+    t_traj, (_, traj) = timeit(traj_fn, state, warmup=1, iters=3)
+    csv_row("heat_trajectory_run", t_traj * 1e6,
+            f"overhead_vs_memtrace={t_traj / t_mem:.2f}x"
+            f";rows={traj.n_steps};n_loc={traj.n_locations}"
+            f";steps_seen={int(jax.device_get(traj.steps_seen))}")
+    assert int(jax.device_get(traj.steps_seen)) == app.n_steps
+
+
+def bench_warm_start():
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    budget, thr = 128, 5e-3   # non-binding for the 17-scope x 6-rung ladder
+
+    t0 = time.perf_counter()
+    r0 = search.autosearch(model.loss, (params, batch),
+                           search.loss_degradation, budget, threshold=thr)
+    t_un = time.perf_counter() - t0
+    csv_row("bench_autosearch_unguided", t_un * 1e6,
+            f"dispatches={r0.n_dispatches};evals={r0.evals_used}"
+            f";scopes={len(r0.assignments)}")
+
+    probe = TruncationPolicy(rules=tuple(
+        TruncationRule(fmt=FPFormat(8, 5), scope=p) for p in r0.assignments))
+    t0 = time.perf_counter()
+    out_lo, traj = profile_trajectory(model.loss, probe, thr,
+                                      n_steps=8)(params, batch)
+    joint = search.loss_degradation((model.loss(params, batch),), (out_lo,))
+    hints = ladder_hints(traj, search.DEFAULT_WIDTHS, thr, 5,
+                         joint_metric=joint)
+    t_prof = time.perf_counter() - t0
+    csv_row("bench_profile_trajectory", t_prof * 1e6,
+            f"n_loc={traj.n_locations};hints={len(hints)}"
+            f";joint_metric={joint:.3e}")
+
+    t0 = time.perf_counter()
+    r1 = search.autosearch(model.loss, (params, batch),
+                           search.loss_degradation, budget, threshold=thr,
+                           warm_start=hints)
+    t_warm = time.perf_counter() - t0
+    d_red = 100.0 * (1.0 - r1.n_dispatches / max(r0.n_dispatches, 1))
+    e_red = 100.0 * (1.0 - r1.evals_used / max(r0.evals_used, 1))
+    csv_row("bench_autosearch_warm", t_warm * 1e6,
+            f"dispatches={r1.n_dispatches};evals={r1.evals_used}"
+            f";dispatch_reduction_pct={d_red:.1f}"
+            f";eval_reduction_pct={e_red:.1f}")
+
+    a0 = {p: (a.man_bits, a.excluded) for p, a in r0.assignments.items()}
+    a1 = {p: (a.man_bits, a.excluded) for p, a in r1.assignments.items()}
+    assert a0 == a1, (
+        f"warm start changed the assignments:\n{r0.table()}\n{r1.table()}")
+    assert r1.n_dispatches < r0.n_dispatches, (
+        f"warm start must reduce probe dispatches "
+        f"({r0.n_dispatches} -> {r1.n_dispatches})")
+    assert r1.evals_used < r0.evals_used
+
+
+def run():
+    bench_trajectory_overhead()
+    bench_warm_start()
+
+
+if __name__ == "__main__":
+    run()

@@ -74,10 +74,11 @@ def main() -> int:
     from benchmarks import (
         fig7_truncation_sweep, table2_memmode, table3_overhead,
         fig8_speedup_model, kernels_micro, perf_fp8_dot, roofline_table,
-        search_convergence, apps_e2e,
+        search_convergence, apps_e2e, instability_profile,
     )
     benches = [
         ("apps_e2e", apps_e2e.run),
+        ("instability_profile", instability_profile.run),
         ("fig7_truncation_sweep", fig7_truncation_sweep.run),
         ("table2_memmode", table2_memmode.run),
         ("table3_overhead", table3_overhead.run),

@@ -65,6 +65,10 @@ class MiniApp:
     search_threshold: float = 1e-3
     # the uniform-low-precision strawman a mixed assignment must beat
     uniform_low: str = "e8m3"
+    # mid-ladder probe format for instability profiling / warm-start hint
+    # calibration: coarse enough that instabilities show, fine enough that
+    # both finer and coarser predictions stay on the search ladder
+    probe_format: str = "e8m5"
 
     # ---- protocol --------------------------------------------------------
     def init_state(self, dtype=jnp.float32):
@@ -108,6 +112,43 @@ class MiniApp:
         return TruncationPolicy(rules=tuple(
             TruncationRule(fmt=f, scope=s)
             for s in self.default_policy_scopes()))
+
+    # ---- instability profiling (repro.profile) ---------------------------
+    def profile_trajectory(self, state=None, *, policy=None, threshold=None,
+                           n_steps=None, **kwargs):
+        """Trajectory-profile ``run_observables``: returns ``(observables,
+        TrajectoryReport)``. The ring buffer defaults to ``self.n_steps + 1``
+        rows — one per solver step plus one for the trailing observable
+        harness — so every step of the trajectory gets its own row and the
+        blame ranking's onsets are exact. ``policy`` defaults to the app's
+        scopes uniformly at :attr:`probe_format`."""
+        from repro.core.api import profile_trajectory as _profile
+        if state is None:
+            state = self.init_state()
+        pol = policy if policy is not None \
+            else self.uniform_policy(self.probe_format)
+        thr = self.search_threshold if threshold is None else threshold
+        steps = (self.n_steps + 1) if n_steps is None else n_steps
+        return _profile(self.run_observables, pol, thr,
+                        n_steps=steps, **kwargs)(state)
+
+    def warm_hints(self, state=None, *, widths=None, threshold=None,
+                   **kwargs):
+        """One profiling run -> ``autosearch(warm_start=...)`` hints: blame
+        the trajectory, calibrate site-level peaks against the measured
+        solver-level metric of the probe run itself, and lower onto the
+        search ladder (see ``repro.profile.ladder_hints``)."""
+        from repro.core.formats import parse_format
+        from repro.profile import ladder_hints
+        from repro.search.driver import DEFAULT_WIDTHS
+        if state is None:
+            state = self.init_state()
+        thr = self.search_threshold if threshold is None else threshold
+        obs_lo, traj = self.profile_trajectory(state, threshold=thr, **kwargs)
+        joint = self.error_metric(self.run_observables(state), obs_lo)
+        return ladder_hints(traj, widths or DEFAULT_WIDTHS, thr,
+                            parse_format(self.probe_format).man_bits,
+                            joint_metric=joint)
 
     def __repr__(self) -> str:
         return (f"<{type(self).__name__} {self.name!r} steps={self.n_steps} "

@@ -7,10 +7,21 @@ from repro.core.policy import (
     TruncationPolicy, TruncationRule, magnitude_below, magnitude_above,
 )
 from repro.core.api import (
-    truncate, truncate_sweep, SweepHandle, memtrace, profile_counts, scope,
+    truncate, truncate_sweep, SweepHandle, memtrace, profile_counts,
+    profile_trajectory, scope,
 )
 from repro.core.counters import CountReport
 from repro.core.memmode import RaptorReport
+
+
+def __getattr__(name):
+    # lazy: repro.profile.trajectory imports repro.core submodules, which
+    # triggers this package __init__ — an eager import back into the
+    # partially-initialized trajectory module would be circular
+    if name == "TrajectoryReport":
+        from repro.profile.trajectory import TrajectoryReport
+        return TrajectoryReport
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from repro.core.speedup import estimate_speedup, fpu_area_model, SpeedupEstimate
 
 __all__ = [
@@ -18,7 +29,7 @@ __all__ = [
     "E5M2", "E4M3", "E4M3FN",
     "TruncationPolicy", "TruncationRule", "magnitude_below", "magnitude_above",
     "truncate", "truncate_sweep", "SweepHandle", "memtrace",
-    "profile_counts", "scope",
-    "CountReport", "RaptorReport",
+    "profile_counts", "profile_trajectory", "scope",
+    "CountReport", "RaptorReport", "TrajectoryReport",
     "estimate_speedup", "fpu_area_model", "SpeedupEstimate",
 ]

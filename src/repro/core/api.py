@@ -194,6 +194,7 @@ class SweepHandle:
         return self._run(table, self._leaves)
 
     def batch(self, tables):
+        from repro.distributed.sharding import drop_padded_rows
         k = int(np.shape(tables)[0])
         mult = self._shard_multiple
         pad = -k % mult
@@ -203,7 +204,7 @@ class SweepHandle:
                  np.tile(self._index.identity_table(), (pad, 1, 1))])
         outs = self._run_batch(tables, self._leaves)
         if pad:
-            outs = jax.tree_util.tree_map(lambda a: a[:k], outs)
+            outs = drop_padded_rows(outs, k)
         return outs
 
 
@@ -306,6 +307,52 @@ def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
     return _cached_transform(
         fn, build, fallback,
         (policy.cache_key(), threshold, impl,
+         _mesh_key(mesh, in_shardings)), cache)
+
+
+def profile_trajectory(fn: Callable, policy: TruncationPolicy,
+                       threshold: float = 1e-3, *, n_steps: int = 128,
+                       impl: str = "auto", cache: bool = True, mesh=None,
+                       in_shardings=None) -> Callable:
+    """Temporal mem-mode: returns ``(outputs, TrajectoryReport)`` where the
+    report holds an ``(n_steps, n_loc)`` per-step deviation trajectory on
+    top of the usual whole-run totals (see ``repro.profile.trajectory``).
+
+    ``n_steps`` sizes the ring buffer; one row per iteration of the
+    program's outermost ``scan``/``while`` loops (the app step loop — size
+    it to ``MiniApp.n_steps`` for an exact trajectory; longer runs wrap).
+    Inner solver loops accumulate into their enclosing step's row, and a
+    straight-line program lands entirely in row 0.
+
+    Trace-cached and meshable exactly like ``memtrace``: with
+    ``mesh``/``in_shardings`` the trajectory's sums/maxes are reduced by
+    XLA's collectives inside the partitioned executable. Every signal the
+    temporal analysis decides on — per-step max deviation, op counts, the
+    step counter — is bit-identical to the single-device run (integer sums
+    and float maxima are order-invariant); the float magnitude sums
+    reproduce up to cross-shard summation order, the usual float-reduction
+    contract. Hand-rolled ``shard_map`` bodies reduce with
+    ``TrajectoryReport.allreduce``/``merge_all``."""
+    if n_steps < 1:
+        raise ValueError(f"n_steps must be >= 1, got {n_steps}")
+    from repro.distributed.sharding import flatten_arg_shardings
+
+    def build(closed, out_tree, bargs, bkwargs):
+        return memmode.shadowed_callable(
+            closed, out_tree, policy, threshold, impl,
+            traj_len=n_steps,
+            flat_shardings=flatten_arg_shardings(
+                mesh, in_shardings, bargs, bkwargs))
+
+    def fallback(closed, out_tree, leaves):
+        outs, report = memmode.eval_shadowed(
+            closed.jaxpr, closed.consts, leaves, policy, threshold, impl,
+            traj_len=n_steps)
+        return jax.tree_util.tree_unflatten(out_tree, outs), report
+
+    return _cached_transform(
+        fn, build, fallback,
+        ("trajectory", policy.cache_key(), threshold, impl, n_steps,
          _mesh_key(mesh, in_shardings)), cache)
 
 

@@ -3,15 +3,32 @@
 Every value flows through the computation as a pair ``(truncated, shadow)``.
 The shadow lane replays the identical op sequence at full carrier precision —
 "as if the entire application had been run in full precision up to that
-point". After each truncated op we measure the elementwise relative deviation
-|low - shadow| / (|shadow| + eps); elements above the user threshold are
-*flagged* and accumulated per source location. The result is the paper's
-heatmap of code locations that do not react well to truncation.
+point". After each truncated op we measure the elementwise deviation with the
+hybrid symmetric metric
+
+    |low - shadow| / max(|shadow|, |low|, _ABS_FLOOR)
+
+which degrades to an absolute-error comparison (in units of ``_ABS_FLOOR``)
+when the shadow value is zero or denormal — a raw ``|low-shadow|/|shadow|``
+would divide by zero there and poison the per-location max with ``inf``/
+``nan``. The metric is bounded by 2 for finite lanes; ``inf`` is reserved for
+genuine lane disagreement on finiteness (one lane overflowed or went NaN).
+Elements above the user threshold are *flagged* and accumulated per source
+location. The result is the paper's heatmap of code locations that do not
+react well to truncation.
 
 Unlike RAPTOR's pointer-swizzling shadow structs (shared-memory only, crashes
 on MPI reductions), the report is a pure pytree of counters that rides the
 normal SPMD data path — mem-mode here works under jit, scan, cond, while and
 across meshes.
+
+Trajectory mode (``traj_len > 0``, see ``repro.profile.trajectory``) widens
+the accumulators to ``(traj_len, n_loc)`` ring buffers indexed by a step
+counter that advances once per iteration of every OUTERMOST loop (the app's
+``step`` scan / solver ``while``), so the report records *when* each site's
+error appears, not just how large it got. The step counter and the ring
+buffers ride the same functional carry as the scalar stats — never a Python
+closure — so all iterations of scan/while/cond bodies are reflected.
 """
 from __future__ import annotations
 
@@ -27,7 +44,26 @@ from repro import compat
 from repro.core.policy import TruncationPolicy, join_stack
 from repro.kernels.quantize_em.ops import quantize
 
-_EPS = 1e-30
+# Hybrid deviation floor: below this magnitude (on BOTH lanes) deviations are
+# measured absolutely in units of the floor instead of relatively, so an
+# exactly-zero or denormal shadow value can never manufacture an inf/nan
+# "relative" error (the zero-crossing poisoning bug).
+_ABS_FLOOR = 1e-6
+
+
+def deviation(lowf, shf):
+    """Elementwise hybrid symmetric deviation between the truncated and
+    shadow lanes (both float32): bounded by 2 for finite inputs, exactly 0
+    for bitwise-equal lanes (including inf==inf), and inf only when the
+    lanes disagree on finiteness or the shadow itself is NaN."""
+    diff = jnp.abs(lowf - shf)
+    denom = jnp.maximum(jnp.maximum(jnp.abs(shf), jnp.abs(lowf)),
+                        jnp.float32(_ABS_FLOOR))
+    rel = diff / denom
+    rel = jnp.where(lowf == shf, jnp.zeros_like(rel), rel)
+    # inf-vs-finite gives inf/inf = nan, nan in either lane propagates:
+    # both are maximal disagreement, not missing data
+    return jnp.where(jnp.isnan(rel), jnp.full_like(rel, jnp.inf), rel)
 
 
 @jax.tree_util.register_dataclass
@@ -108,10 +144,15 @@ def _tree_flags():
 
 
 class _Recorder:
-    """Mutable-during-trace location table; emits functional accumulators."""
+    """Mutable-during-trace location table; emits functional accumulators.
 
-    def __init__(self, threshold: float):
+    ``traj_len > 0`` switches the stats carry into trajectory mode: the
+    tuple grows ``(traj_len, n_loc)`` ring buffers plus a step counter (see
+    module docstring)."""
+
+    def __init__(self, threshold: float, traj_len: int = 0):
         self.threshold = threshold
+        self.traj_len = int(traj_len)
         self.locations: List[str] = []
         self.loc_index: Dict[str, int] = {}
 
@@ -122,28 +163,63 @@ class _Recorder:
         return self.loc_index[desc]
 
 
-def _zero_stats(n: int):
-    return (jnp.zeros((n,), jnp.int64 if jax.config.jax_enable_x64 else jnp.int32),
+def _count_dtype():
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def _zero_stats(n: int, traj_len: int = 0):
+    cdt = _count_dtype()
+    base = (jnp.zeros((n,), cdt),
             jnp.zeros((n,), jnp.float32),
-            jnp.zeros((n,), jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+            jnp.zeros((n,), cdt))
+    if not traj_len:
+        return base
+    return base + (jnp.zeros((traj_len, n), jnp.float32),   # per-step max dev
+                   jnp.zeros((traj_len, n), jnp.float32),   # per-step |err| sum
+                   jnp.zeros((traj_len, n), jnp.float32),   # per-step |shadow| sum
+                   jnp.zeros((traj_len, n), cdt),           # per-step elements
+                   jnp.zeros((), jnp.int32))                # step counter
 
 
 def _accumulate(stats, idx: int, low, shadow, threshold: float):
-    flags, max_rel, op_counts = stats
+    flags, max_rel, op_counts, *traj = stats
     lowf = low.astype(jnp.float32)
     shf = shadow.astype(jnp.float32)
-    rel = jnp.abs(lowf - shf) / (jnp.abs(shf) + _EPS)
+    rel = deviation(lowf, shf)
     n_flag = jnp.sum(rel > threshold).astype(flags.dtype)
-    m = jnp.max(rel) if rel.size else jnp.float32(0)
+    m = (jnp.max(rel) if rel.size else jnp.float32(0)).astype(jnp.float32)
     flags = flags.at[idx].add(n_flag)
-    max_rel = max_rel.at[idx].max(m.astype(jnp.float32))
+    max_rel = max_rel.at[idx].max(m)
     op_counts = op_counts.at[idx].add(jnp.asarray(low.size, op_counts.dtype))
-    return (flags, max_rel, op_counts)
+    if not traj:
+        return (flags, max_rel, op_counts)
+    t_max, t_abs, t_mag, t_cnt, step = traj
+    row = jnp.remainder(step, t_max.shape[0])
+    # absolute error with the same equal-lanes/NaN conventions as deviation()
+    aerr = jnp.abs(lowf - shf)
+    aerr = jnp.where(lowf == shf, jnp.zeros_like(aerr), aerr)
+    aerr = jnp.where(jnp.isnan(aerr), jnp.full_like(aerr, jnp.inf), aerr)
+    err_sum = (jnp.sum(aerr) if rel.size else jnp.float32(0))
+    mag_sum = (jnp.sum(jnp.abs(shf)) if rel.size else jnp.float32(0))
+    t_max = t_max.at[row, idx].max(m)
+    t_abs = t_abs.at[row, idx].add(err_sum.astype(jnp.float32))
+    t_mag = t_mag.at[row, idx].add(mag_sum.astype(jnp.float32))
+    t_cnt = t_cnt.at[row, idx].add(jnp.asarray(low.size, t_cnt.dtype))
+    return (flags, max_rel, op_counts, t_max, t_abs, t_mag, t_cnt, step)
+
+
+def _bump_step(stats):
+    """Advance the trajectory step counter (end of one outermost-loop
+    iteration); identity for non-trajectory stats."""
+    if len(stats) == 3:
+        return stats
+    return stats[:-1] + (stats[-1] + jnp.int32(1),)
 
 
 def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
                       policy: TruncationPolicy, threshold: float,
-                      impl: str = "auto", *, flat_shardings=None):
+                      impl: str = "auto", *, flat_shardings=None,
+                      traj_len: int = 0):
     """jit-close the paired (truncated, shadow) evaluation once — the
     mem-mode analogue of ``interpreter.quantized_callable``. The RaptorReport
     rides out of jit as a pytree (static location table, array stats).
@@ -152,12 +228,14 @@ def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
     flatten_arg_shardings``) GSPMD-partition the paired evaluation over the
     mesh; the report's in-graph sums/maxes become global collectives so it
     is exact under data parallelism (see ``RaptorReport`` reduction
-    notes)."""
+    notes). ``traj_len > 0`` returns a ``TrajectoryReport`` instead (per-step
+    ring buffers, same exactness contract)."""
     from repro.core.interpreter import _jit_sharded
 
     def run(flat):
         outs, report = eval_shadowed(closed.jaxpr, closed.consts, list(flat),
-                                     policy, threshold, impl)
+                                     policy, threshold, impl,
+                                     traj_len=traj_len)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
     return _jit_sharded(run, flat_shardings)
@@ -165,19 +243,30 @@ def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
 
 def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
                   policy: TruncationPolicy, threshold: float, impl: str = "auto",
-                  ) -> Tuple[List[Any], RaptorReport]:
+                  *, traj_len: int = 0) -> Tuple[List[Any], Any]:
     """Two-pass evaluation: first a dry trace to build the static location
-    table (so the stats arrays have a fixed shape), then the paired eval."""
-    rec = _Recorder(threshold)
+    table (so the stats arrays have a fixed shape), then the paired eval.
+
+    Returns ``(outs, RaptorReport)``; with ``traj_len > 0`` the report is a
+    :class:`repro.profile.trajectory.TrajectoryReport` whose ring buffers
+    hold one row per outermost-loop iteration (modulo ``traj_len``)."""
+    rec = _Recorder(threshold, traj_len)
     _collect_locations(jaxpr, policy, rec, "")
     n = max(len(rec.locations), 1)
     if not rec.locations:
         rec.loc_id("<no truncated locations>")
 
-    stats = _zero_stats(n)
+    stats = _zero_stats(n, traj_len)
     outs, _, stats = _eval(jaxpr, consts, args, args, policy, threshold, impl,
                            rec, stats)
     report = RaptorReport(tuple(rec.locations), stats[0], stats[1], stats[2])
+    if traj_len:
+        from repro.profile.trajectory import TrajectoryReport, scope_of_location
+        report = TrajectoryReport(
+            totals=report,
+            scopes=tuple(scope_of_location(l) for l in rec.locations),
+            max_rel=stats[3], abs_sum=stats[4], mag_sum=stats[5],
+            op_counts=stats[6], steps_seen=stats[7])
     return outs, report
 
 
@@ -222,7 +311,10 @@ def _collect_locations(jaxpr: jcore.Jaxpr, policy, rec: _Recorder, prefix: str):
 
 
 def _eval(jaxpr, consts, low_args, shadow_args, policy, threshold, impl,
-          rec: _Recorder, stats, prefix: str = ""):
+          rec: _Recorder, stats, prefix: str = "", depth: int = 0):
+    """``depth`` counts enclosing scan/while bodies: iterations of depth-0
+    loops are the trajectory "steps" (the app's outermost step loop); inner
+    solver loops accumulate into their enclosing step's row."""
     low_env, sh_env = {}, {}
 
     def read(v):
@@ -248,7 +340,8 @@ def _eval(jaxpr, consts, low_args, shadow_args, policy, threshold, impl,
         handler = _MEM_HOPS.get(prim.name)
         if handler is not None:
             louts, shouts, stats = handler(eqn, lows, shadows, policy,
-                                           threshold, impl, rec, stats, ns)
+                                           threshold, impl, rec, stats, ns,
+                                           depth)
         else:
             louts = prim.bind(*lows, **eqn.params)
             shouts = prim.bind(*shadows, **eqn.params)
@@ -276,18 +369,24 @@ def _eval(jaxpr, consts, low_args, shadow_args, policy, threshold, impl,
 
 
 # ---- mem-mode HOP handlers (stats ride the carry) --------------------------
+# The stats tuple is ALWAYS threaded through the functional carry of the
+# rebuilt HOP — never captured from the enclosing Python closure — so every
+# iteration of scan/while (and whichever cond branch runs) contributes to the
+# per-site accumulators; an error that only appears at iteration k>1 is
+# recorded exactly like one at iteration 0 (pinned by tests/test_memmode.py).
 
 def _mem_call(eqn, lows, shadows, policy, threshold, impl, rec, stats,
-              prefix=""):
+              prefix="", depth=0):
     closed = eqn.params.get("call_jaxpr", eqn.params.get("jaxpr"))
     closed = closed if isinstance(closed, jcore.ClosedJaxpr) else jcore.ClosedJaxpr(closed, ())
     outs, shouts, stats = _eval(closed.jaxpr, closed.consts, lows, shadows,
-                                policy, threshold, impl, rec, stats, prefix)
+                                policy, threshold, impl, rec, stats, prefix,
+                                depth)
     return outs, shouts, stats
 
 
 def _mem_scan(eqn, lows, shadows, policy, threshold, impl, rec, stats,
-              prefix=""):
+              prefix="", depth=0):
     p = eqn.params
     closed = p["jaxpr"]
     nc, ncarry = p["num_consts"], p["num_carry"]
@@ -302,7 +401,9 @@ def _mem_scan(eqn, lows, shadows, policy, threshold, impl, rec, stats,
         env_sh = list(sh_c) + list(sh_car) + list(sh_x)
         lo_out, sh_out, st2 = _eval(closed.jaxpr, closed.consts, env_low,
                                     env_sh, policy, threshold, impl, rec, st,
-                                    prefix)
+                                    prefix, depth + 1)
+        if depth == 0:
+            st2 = _bump_step(st2)   # one outermost scan trip = one step
         lo_out = tuple(lo_out)
         sh_out = tuple(sh_out)
         return ((lo_out[:ncarry], sh_out[:ncarry], st2),
@@ -315,7 +416,7 @@ def _mem_scan(eqn, lows, shadows, policy, threshold, impl, rec, stats,
 
 
 def _mem_while(eqn, lows, shadows, policy, threshold, impl, rec, stats,
-               prefix=""):
+               prefix="", depth=0):
     p = eqn.params
     cond_closed = _as_closed(p["cond_jaxpr"])
     body_closed = _as_closed(p["body_jaxpr"])
@@ -332,7 +433,7 @@ def _mem_while(eqn, lows, shadows, policy, threshold, impl, rec, stats,
         # a predicate can't update the carry.
         lo, _, _ = _eval(cond_closed.jaxpr, cond_closed.consts,
                          list(lo_cc) + list(lo_c), list(sh_cc) + list(sh_c),
-                         policy, threshold, impl, rec, st, prefix)
+                         policy, threshold, impl, rec, st, prefix, depth + 1)
         return lo[0]
 
     def body_fn(carry):
@@ -340,7 +441,10 @@ def _mem_while(eqn, lows, shadows, policy, threshold, impl, rec, stats,
         lo, sh, st2 = _eval(body_closed.jaxpr, body_closed.consts,
                             list(lo_bc) + list(lo_c),
                             list(sh_bc) + list(sh_c),
-                            policy, threshold, impl, rec, st, prefix)
+                            policy, threshold, impl, rec, st, prefix,
+                            depth + 1)
+        if depth == 0:
+            st2 = _bump_step(st2)   # one outermost while trip = one step
         return tuple(lo), tuple(sh), st2
 
     lo_fin, sh_fin, stats = lax.while_loop(
@@ -349,7 +453,7 @@ def _mem_while(eqn, lows, shadows, policy, threshold, impl, rec, stats,
 
 
 def _mem_cond(eqn, lows, shadows, policy, threshold, impl, rec, stats,
-              prefix=""):
+              prefix="", depth=0):
     idx, *lo_ops = lows
     _, *sh_ops = shadows
 
@@ -360,7 +464,7 @@ def _mem_cond(eqn, lows, shadows, policy, threshold, impl, rec, stats,
             lo_in, sh_in, st = ops
             lo, sh, st2 = _eval(closed.jaxpr, closed.consts, list(lo_in),
                                 list(sh_in), policy, threshold, impl, rec,
-                                st, prefix)
+                                st, prefix, depth)
             return tuple(lo), tuple(sh), st2
 
         return branch

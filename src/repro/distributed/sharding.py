@@ -206,6 +206,14 @@ def pad_to_shards(n: int, mesh: Optional[Mesh], axis: str = "probe") -> int:
     return -(-n // size) * size
 
 
+def drop_padded_rows(tree, n_real: int):
+    """Slice identity-padded rows off the leading (candidate) axis of every
+    leaf of a batched result. Padded probes exist only to satisfy the fixed
+    sharded signature — they must be masked out before results are read,
+    compared, or merged, so padded and unpadded paths stay bit-identical."""
+    return jax.tree_util.tree_map(lambda a: a[:n_real], tree)
+
+
 def _is_sharding_leaf(x) -> bool:
     return (x is None or isinstance(x, P)
             or isinstance(x, jax.sharding.Sharding))

@@ -1,0 +1,10 @@
+# Instability profiling: per-site error trajectories over the program's
+# step loops, divergence-onset detection, per-scope blame ranking, and the
+# error-guided warm start feeding repro.search.autosearch.
+from repro.profile.trajectory import (
+    TrajectoryReport, ScopeBlame, ladder_hints, scope_of_location,
+)
+
+__all__ = [
+    "TrajectoryReport", "ScopeBlame", "ladder_hints", "scope_of_location",
+]

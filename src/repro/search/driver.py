@@ -16,7 +16,10 @@ the runtime-parameterized quantize path (``api.truncate_sweep``):
      mantissa-width ladder is evaluated in one batched call and the
      narrowest format whose error metric stays under the threshold is
      assigned — the region's measured sensitivity, the quantitative form of
-     the paper's per-module truncation experiments.
+     the paper's per-module truncation experiments. With ``warm_start``
+     hints (from ``repro.profile``'s instability trajectories) the
+     exhaustive ladder is replaced by a hint-seeded bisection of each
+     scope's pass/fail boundary, batched across scopes per round.
   4. **Greedy-exclusion refinement.** If the joint policy misses the
      threshold, every single-scope exclusion candidate is evaluated (again
      batched through the same executable) and the most error-reducing one
@@ -42,6 +45,40 @@ from repro.search.scopes import ScopeInfo, discover_scopes
 
 # mantissa-width ladder, finest first; 23 at e8 is fp32 = identity
 DEFAULT_WIDTHS: Tuple[int, ...] = (23, 15, 10, 7, 5, 3, 2)
+
+_UNHINTED = object()
+
+
+def _frontier_hints(warm_start, scopes) -> Dict[str, Optional[int]]:
+    """Project user/profile warm-start hints onto the search frontier.
+
+    Hint keys are scope paths (site scopes from ``profile.ladder_hints``,
+    or coarser user-written prefixes); a frontier scope collects every hint
+    at, below, or above it in the scope tree. Conflicts resolve
+    conservatively: a pinned-high (``None``) hint dominates, otherwise the
+    FINEST predicted width wins (a too-coarse prediction can only skip
+    probes a sibling site needs)."""
+    if warm_start is None:
+        return {}
+    if not hasattr(warm_start, "items"):
+        raise TypeError(
+            "warm_start must be a mapping of scope path -> predicted "
+            "mantissa width (None = pin to full precision); lower a "
+            "TrajectoryReport with repro.profile.ladder_hints first, "
+            f"got {type(warm_start).__name__}")
+    out: Dict[str, Optional[int]] = {}
+    for si in scopes:
+        applicable = [
+            pred for path, pred in warm_start.items()
+            if path == si.path or path.startswith(si.path + "/")
+            or si.path.startswith(path + "/")]
+        if not applicable:
+            continue
+        if any(p is None for p in applicable):
+            out[si.path] = None
+        else:
+            out[si.path] = max(int(p) for p in applicable)
+    return out
 
 
 @dataclasses.dataclass
@@ -77,6 +114,7 @@ class SearchResult:
     n_compiles: int = 0
     n_sites: int = 0                  # runtime-table rows (quantize sites)
     n_dispatches: int = 0             # batched-executable launches
+    n_warm_hints: int = 0             # frontier scopes with a warm-start hint
     probe_batch: int = 0              # K: table rows per dispatch (padded)
     max_dispatch_rows: int = 0        # most REAL rows (ref + candidates)
                                       # any single dispatch carried —
@@ -129,6 +167,7 @@ def autosearch(fn: Callable, args: Sequence = (),
                min_fraction: float = 0.01, max_scopes: Optional[int] = None,
                memflag_threshold: Optional[float] = None,
                impl: str = "auto", refine: bool = True,
+               warm_start: Optional[Dict[str, Optional[int]]] = None,
                mesh=None, batch_axis: str = "probe", in_shardings=None,
                verbose: bool = False) -> SearchResult:
     """Search a per-scope mixed-precision assignment for ``fn(*args)``.
@@ -153,6 +192,22 @@ def autosearch(fn: Callable, args: Sequence = (),
     multiple so every launch divides evenly. Budget accounting, probe order,
     and the returned assignments are identical to the single-device path —
     padded slots are identity rows whose outputs are never read.
+
+    ``warm_start`` is the error-guided entry point: a mapping from scope
+    path to a predicted mantissa width (``None`` = predicted inadmissible at
+    every candidate width, i.e. pinned to full precision), typically built
+    by ``repro.profile.ladder_hints`` from a ``profile_trajectory`` run.
+    Hints reshape the *probe schedule*: instead of exhaustively probing
+    every ladder rung per scope, each scope binary-searches the
+    pass/fail boundary of its solo ladder, seeded at the hinted width, and
+    every round batches all unresolved scopes into shared dispatches — so
+    probe dispatches scale with the handful of bisection rounds instead of
+    ``n_scopes`` (and good hints resolve most scopes in the very first
+    round). The bisection trusts that a scope's solo error is monotone in
+    mantissa width — exact for rounding-dominated workloads, and asserted
+    against the unguided search on the mini-apps and the bench model in
+    the test suite; a non-monotone ladder can make the guided pick differ
+    (it is still a measured-admissible width, never an unvalidated one).
 
     ``memflag_threshold`` is accepted for backward compatibility but unused:
     exclusion victims are now chosen by batched trial exclusion (which costs
@@ -192,12 +247,15 @@ def autosearch(fn: Callable, args: Sequence = (),
                                  max_scopes=max_scopes)
     scopes = list(scopes)
 
+    hints = _frontier_hints(warm_start, scopes)
+
     def result(assignments, final_err):
         return SearchResult(
             assignments=assignments, exp_bits=exp_bits, threshold=threshold,
             budget=budget, evals_used=evals, final_error=final_err,
             converged=final_err <= threshold, history=history,
             n_compiles=compiles, n_sites=n_sites, n_dispatches=dispatches,
+            n_warm_hints=len(hints),
             probe_batch=K, max_dispatch_rows=max_rows, n_devices=ndev)
 
     cand_widths = [w for w in widths if w < 23]
@@ -226,11 +284,17 @@ def autosearch(fn: Callable, args: Sequence = (),
         flat_shardings=flatten_arg_shardings(mesh, in_shardings,
                                              tuple(args), kwargs))
     # fixed batch width: every call shares one (K, num_sites, 4) signature,
-    # so XLA compiles the batched evaluator exactly once. K fits a full
-    # per-scope ladder plus the reference row of the very first call; under
-    # a mesh it is rounded up so the sharded candidate axis divides evenly
-    # (padded slots carry identity rows and their outputs are never read).
-    K = pad_to_shards(len(cand_widths) + 1, mesh, batch_axis)
+    # so XLA compiles the batched evaluator exactly once. The LOGICAL width
+    # fits a full per-scope ladder plus the reference row of the very first
+    # call; under a mesh the physical K is rounded up so the sharded
+    # candidate axis divides evenly. Chunking always fills at most k_logical
+    # REAL rows per dispatch — the extra sharded slots only ever carry
+    # identity padding (outputs never read), so n_dispatches,
+    # max_dispatch_rows and every stat derived from them are bit-identical
+    # to the unsharded path even when k_logical doesn't divide the shard
+    # count.
+    k_logical = len(cand_widths) + 1
+    K = pad_to_shards(k_logical, mesh, batch_axis)
 
     ref_host: List[Optional[object]] = [None]  # full-precision outputs (np)
 
@@ -247,7 +311,7 @@ def autosearch(fn: Callable, args: Sequence = (),
             rows = []
             if ref_host[0] is None:
                 rows.append(index.identity_table())
-            take = K - len(rows)
+            take = k_logical - len(rows)
             for tag, pol in cands[pos:pos + take]:
                 chunk.append(tag)
                 rows.append(index.table_for(pol))
@@ -295,32 +359,105 @@ def autosearch(fn: Callable, args: Sequence = (),
         return TruncationPolicy(rules=tuple(rules))
 
     # ---- phase 1: solo per-scope ladder probe, widest work first -----------
-    # Each candidate truncates ONE region; all of a region's ladder widths
-    # are probed in one batched call and the narrowest admissible width is
+    # Each candidate truncates ONE region; the narrowest admissible width is
     # that region's measured sensitivity. Composition errors are phase 2's
     # job. One evaluation stays reserved for the joint check so evals_used
     # can never exceed the budget.
     reserve = 1
     assignments: Dict[str, ScopeAssignment] = {}
-    for si in scopes:
-        afford = budget - evals - reserve
-        if afford <= 0:
-            assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
-            continue
-        # under a tight budget probe the finest widths (most likely to be
-        # admissible, so the scope still gets some truncation)
-        probe = cand_widths[:afford]
-        errs = eval_candidates([
-            (f"ladder:{si.path}:m{w}", policy_of({}, (si.path, w)))
-            for w in probe])
-        passing = [(w, e) for w, e in zip(probe, errs) if e <= threshold]
-        if passing:
-            w_pick, err_pick = min(passing)   # narrowest admissible width
-        else:
-            w_pick, err_pick = widths[0], 0.0
+
+    def accept(si, w_pick, err_pick):
         assignments[si.path] = ScopeAssignment(si, w_pick, err_pick)
         log(f"{si.path} ({si.fraction * 100:.1f}% flops) -> "
             f"m{w_pick} (err {err_pick:.3e}, {evals} evals)")
+
+    if hints:
+        # ---- error-guided warm start (see the warm_start doc above) --------
+        # Solo ladder error is monotone in mantissa width for rounding-
+        # dominated workloads (each bit halves the local error), so the
+        # narrowest admissible width is the boundary of a pass-prefix of the
+        # finest-first ladder. Round 1 probes every scope's hinted rung plus
+        # its next-narrower neighbour (an accurate hint brackets the
+        # boundary immediately; pinned-high scopes seed at the finest rung,
+        # so one failing probe confirms "nothing passes"); round 2 probes
+        # whatever interval round 1 left undecided. Both rounds pack ALL
+        # scopes into shared dispatches, so probe dispatches are bounded by
+        # the two rounds — not by scopes x ladder length — and rungs are
+        # only skipped when the measured boundary implies them.
+        nw = len(cand_widths)
+        lo = {si.path: -1 for si in scopes}   # largest index known passing
+        hi = {si.path: nw for si in scopes}   # smallest index known failing
+        err_at: Dict[Tuple[str, int], float] = {}
+
+        def seed(si) -> int:
+            pred = hints.get(si.path, _UNHINTED)
+            if pred is _UNHINTED:
+                return (nw - 1) // 2          # no information: start mid
+            if pred is None:
+                return 0                       # pinned high: finest rung
+            if any(w >= pred for w in cand_widths):
+                # narrowest candidate at/above the predicted width
+                return max(i for i, w in enumerate(cand_widths) if w >= pred)
+            return 0
+
+        def probe_round(plan) -> None:
+            batch: List[Tuple[ScopeInfo, int]] = []
+            planned = 0
+            for si in scopes:
+                afford = budget - evals - reserve - planned
+                if afford <= 0:
+                    break
+                idxs = [i for i in plan(si)
+                        if lo[si.path] < i < hi[si.path]][:afford]
+                planned += len(idxs)
+                batch.extend((si, i) for i in idxs)
+            if not batch:
+                return
+            errs = eval_candidates([
+                (f"ladder:{si.path}:m{cand_widths[i]}",
+                 policy_of({}, (si.path, cand_widths[i])))
+                for si, i in batch])
+            for (si, i), e in zip(batch, errs):
+                err_at[(si.path, i)] = e
+                if e <= threshold:
+                    lo[si.path] = max(lo[si.path], i)
+                else:
+                    hi[si.path] = min(hi[si.path], i)
+
+        def seed_plan(si):
+            s = seed(si)
+            if hints.get(si.path, _UNHINTED) is None:
+                return [s]   # pinned high: the failing finest-rung probe
+                             # alone confirms "nothing passes"
+            return [i for i in (s, s + 1) if i < nw]
+
+        probe_round(seed_plan)
+        probe_round(lambda si: range(lo[si.path] + 1, hi[si.path]))
+        for si in scopes:
+            b = lo[si.path]
+            if b >= 0:
+                # narrowest width measured admissible (== the full-ladder
+                # pick whenever solo error is monotone in width)
+                accept(si, cand_widths[b], err_at[(si.path, b)])
+            else:
+                accept(si, widths[0], 0.0)     # nothing admissible: full
+    else:
+        for si in scopes:
+            afford = budget - evals - reserve
+            if afford <= 0:
+                assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
+                continue
+            # under a tight budget probe the finest widths (most likely to
+            # be admissible, so the scope still gets some truncation)
+            probe = cand_widths[:afford]
+            errs = eval_candidates([
+                (f"ladder:{si.path}:m{w}", policy_of({}, (si.path, w)))
+                for w in probe])
+            passing = [(w, e) for w, e in zip(probe, errs) if e <= threshold]
+            if passing:
+                accept(si, *min(passing))    # narrowest admissible width
+            else:
+                assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
 
     # ---- phase 2: joint check + greedy-exclusion refinement ----------------
     if policy_of(assignments).rules:

@@ -140,6 +140,81 @@ def test_gate_calibration_row_catches_catastrophic_kernel_regression(
     assert any("quantize_e5m7_4M" in f for f in failures), failures
 
 
+def test_gate_zero_baseline_is_no_gate_warn(tmp_path):
+    """Bugfix: a 0/negative/NaN baseline value (placeholder row of a
+    freshly-added benchmark) must warn and skip — never ZeroDivisionError
+    or fail the gate — while other rows in the same artifact stay gated."""
+    base, fresh = str(tmp_path / "b"), str(tmp_path / "f")
+    rows = dict(BASE_ROWS)
+    rows["truncate_cached_call"] = 0.0            # zero baseline
+    rows["policy_sweep_per_candidate_table"] = float("nan")
+    _write(base, _artifact("search_convergence", rows))
+    _write(fresh, _artifact("search_convergence", BASE_ROWS))
+    logs = []
+    failures = compare(load_artifacts(base), load_artifacts(fresh),
+                       0.25, log=logs.append)
+    assert failures == [], failures
+    assert any("truncate_cached_call" in l and "not gated" in l
+               for l in logs), logs
+    assert any("policy_sweep_per_candidate_table" in l
+               and "not gated" in l for l in logs), logs
+    # ...but a real regression on a row with a usable baseline in the
+    # same artifact still fails
+    slow = dict(BASE_ROWS)
+    slow["autosearch_wall_us"] *= 2.0
+    _write(fresh, _artifact("search_convergence", slow))
+    failures = compare(load_artifacts(base), load_artifacts(fresh),
+                       0.25, log=lambda *_: None)
+    assert len(failures) == 1 and "autosearch_wall_us" in failures[0]
+
+
+def test_gate_nonfinite_fresh_value_fails_loudly(tmp_path):
+    """A NaN/inf fresh measurement is a broken benchmark, not a pass."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    broken = dict(BASE_ROWS)
+    broken["autosearch_wall_us"] = float("inf")
+    _write(fresh, _artifact("search_convergence", broken))
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, log=lambda *_: None)
+    assert len(failures) == 1 and "not finite" in failures[0]
+
+
+def test_gate_freshly_added_benchmark_without_baseline_warns(tmp_path):
+    """Bugfix: a benchmark newly added to GATED whose baseline is not
+    committed yet must not crash (KeyError) or fail — it warns that the
+    gate is unarmed until the baseline lands."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    _write(base, _artifact("search_convergence", BASE_ROWS))
+    _write(fresh, _artifact("search_convergence", BASE_ROWS))
+    _write(fresh, _artifact("brand_new_bench", {"hot_loop": 10.0}))
+    gated = {"search_convergence": GATED["search_convergence"],
+             "brand_new_bench": {"hot_loop": "lower"}}
+    logs = []
+    failures = compare(load_artifacts(str(base)), load_artifacts(str(fresh)),
+                       0.25, gated=gated, log=logs.append)
+    assert failures == [], failures
+    assert any("brand_new_bench" in l and "no committed baseline" in l
+               for l in logs), logs
+
+
+def test_load_artifacts_skips_malformed_rows(tmp_path):
+    """Derived-only rows (no us_per_call) or non-numeric values must not
+    KeyError the whole gate."""
+    art = {"benchmark": "weird", "wall_s": 1.0, "meta": {},
+           "rows": [{"name": "ok", "us_per_call": 5.0, "derived": {}},
+                    {"name": "derived_only", "derived": {"n": 3}},
+                    {"us_per_call": 1.0},
+                    {"name": "stringy", "us_per_call": "fast"}]}
+    os.makedirs(tmp_path, exist_ok=True)
+    with open(os.path.join(tmp_path, "BENCH_weird.json"), "w") as f:
+        json.dump(art, f)
+    arts = load_artifacts(str(tmp_path))
+    assert arts["weird"] == {"ok": 5.0}
+
+
 def test_committed_baselines_cover_the_gated_ci_benchmarks():
     """The gate only has teeth if baselines for the gated benchmarks are
     committed; keep GATED and benchmarks/baselines/ in sync."""

@@ -1,5 +1,6 @@
 """Mem-mode: shadow correctness, flag heatmaps, the Table-2 exclusion flow."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -98,3 +99,117 @@ def test_memmode_jits():
     assert float(out1) == float(out2)
     np.testing.assert_array_equal(np.asarray(rep1.flags),
                                   np.asarray(rep2.flags))
+
+
+# --------------------------------------------------------------------------
+# hybrid deviation metric: zero/denormal shadow values must not poison the
+# per-location max with inf/nan (regression for the divide-by-zero bug)
+# --------------------------------------------------------------------------
+
+def test_deviation_zero_and_denormal_shadow():
+    from repro.core.memmode import deviation
+
+    def dev(lo, sh):
+        return float(deviation(jnp.float32(lo), jnp.float32(sh)))
+
+    # exactly-zero shadow vs nonzero low: finite, bounded — measured
+    # absolutely, never |low|/eps blow-up
+    assert 0.0 < dev(1e-3, 0.0) <= 2.0
+    assert 0.0 < dev(2.0, 0.0) <= 2.0
+    # denormal noise around a denormal shadow is invisible, not infinite
+    assert dev(1e-40, 0.0) < 1e-3
+    assert dev(0.0, 1e-40) < 1e-3
+    # equal lanes are exactly zero deviation — including both-inf
+    assert dev(0.0, 0.0) == 0.0
+    assert dev(jnp.inf, jnp.inf) == 0.0
+    # genuine finiteness disagreement is maximal
+    assert dev(jnp.inf, 3e9) == float("inf")
+    assert dev(jnp.nan, 1.0) == float("inf")
+    # ordinary relative deviation in the normal regime is preserved
+    assert dev(1.0, 1.001) == pytest.approx(1e-3, rel=1e-2)
+
+
+def test_zero_crossing_input_does_not_poison_max_rel():
+    """End-to-end regression with a zero-crossing shadow value: two
+    different op orders produce the same exact shadow but different
+    truncated values, so the subtraction site sees shadow == 0 with a
+    nonzero low lane. max_rel must stay finite and bounded."""
+    def f(x):
+        with scope("zc"):
+            u = (x * jnp.asarray(1.1, x.dtype)) * jnp.asarray(5.0, x.dtype)
+            v = (x * jnp.asarray(5.0, x.dtype)) * jnp.asarray(1.1, x.dtype)
+            d = u - v          # shadow: exactly 0; low: quantized u != v
+        return jnp.sum(d)
+
+    x = jnp.asarray([2.0, 4.0], jnp.float32)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    mr = np.asarray(jax.device_get(rep.max_rel))
+    # the shadow subtraction really is a zero crossing and the low lane
+    # really deviates (otherwise this regression tests nothing)
+    assert int(jnp.sum(rep.flags)) > 0
+    assert np.all(np.isfinite(mr)), mr
+    assert np.all(mr <= 2.0), mr
+
+
+def test_while_loop_error_appearing_after_iteration_k():
+    """Per-site stats must reflect ALL while iterations (threaded via the
+    carry): an error that only appears from iteration k>1 is flagged, and
+    op counts cover every trip."""
+    k, n = 2, 5
+
+    def f(x):
+        def cond(c):
+            return c[0] < n
+
+        def body(c):
+            i, v = c
+            with scope("w"):
+                # x2.0 is exact in e5m2; x1.09 rounds — error exists only
+                # from iteration k onward
+                fac = jnp.where(i < k, jnp.asarray(2.0, v.dtype),
+                                jnp.asarray(1.09, v.dtype))
+                v = v * fac
+            return (i + 1, v)
+
+        return jnp.sum(lax.while_loop(cond, body, (jnp.int32(0), x))[1])
+
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    (i,) = [j for j, l in enumerate(rep.locations) if l.startswith("w ")]
+    ops = np.asarray(jax.device_get(rep.op_counts))
+    flags = np.asarray(jax.device_get(rep.flags))
+    assert ops[i] == 2 * n            # every iteration counted
+    # iterations k..n-1 all deviate on both elements
+    assert flags[i] == 2 * (n - k)
+
+
+def test_cond_branch_stats_accumulate_across_scan_iterations():
+    """Stats ride the switch operand through every scan trip: errors from
+    both branches accumulate, whichever iteration selects them."""
+    def f(x):
+        def body(c, t):
+            def exact(v):
+                with scope("b_exact"):
+                    return v * jnp.asarray(2.0, v.dtype)
+
+            def lossy(v):
+                with scope("b_lossy"):
+                    return v * jnp.asarray(1.09, v.dtype)
+
+            return lax.switch(t % 2, [exact, lossy], c), None
+
+        y, _ = lax.scan(body, x, jnp.arange(4, dtype=jnp.int32))
+        return jnp.sum(y)
+
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    by = {l.split(" ")[0]: i for i, l in enumerate(rep.locations)}
+    ops = np.asarray(jax.device_get(rep.op_counts))
+    flags = np.asarray(jax.device_get(rep.flags))
+    # each branch ran twice over 2 elements
+    assert ops[by["b_exact"]] == 4 and ops[by["b_lossy"]] == 4
+    # the lossy branch deviates on both its trips (t=1, t=3); the exact
+    # branch is clean on t=0 but inherits the drifted carry on t=2 — the
+    # shadow lane measures accumulated divergence, per iteration
+    assert flags[by["b_lossy"]] == 4
+    assert flags[by["b_exact"]] == 2

@@ -166,6 +166,137 @@ def test_autosearch_quickstart_model():
     assert abs(lossy - full) / abs(full) <= 5e-3
 
 
+# --------------------------------------------------------------------------
+# error-guided warm start (repro.profile -> autosearch)
+# --------------------------------------------------------------------------
+
+def _assigns(res):
+    return {p: (a.man_bits, a.excluded) for p, a in res.assignments.items()}
+
+
+def test_warm_start_identical_assignments_fewer_evals():
+    """Accurate hints must reproduce the unguided assignments while spending
+    strictly fewer probe evaluations (the bisection skips certain rungs)."""
+    args = _toy_args()
+    r0 = search.autosearch(_toy, args, search.rel_error, 48, threshold=1e-2)
+    hints = {p: a.man_bits for p, a in r0.assignments.items()}
+    r1 = search.autosearch(_toy, args, search.rel_error, 48, threshold=1e-2,
+                           warm_start=hints)
+    assert _assigns(r1) == _assigns(r0)
+    assert r1.final_error == r0.final_error
+    assert r1.evals_used < r0.evals_used
+    assert r1.n_dispatches <= r0.n_dispatches
+    assert r1.n_warm_hints == len(r0.assignments)
+
+
+def test_warm_start_wrong_hints_still_measured():
+    """Hints shape the probe schedule, never the verdict: absurd hints
+    (everything pinned high / everything narrowest) still land on the same
+    assignments for a monotone workload, just with more bisection probes."""
+    args = _toy_args()
+    r0 = search.autosearch(_toy, args, search.rel_error, 48, threshold=1e-2)
+    for bad in ({p: None for p in r0.assignments},
+                {p: 2 for p in r0.assignments},
+                {p: 15 for p in r0.assignments}):
+        r1 = search.autosearch(_toy, args, search.rel_error, 48,
+                               threshold=1e-2, warm_start=bad)
+        assert _assigns(r1) == _assigns(r0), bad
+
+
+def test_warm_start_prefix_hints_project_onto_frontier():
+    """Hint keys may be deeper (site scopes) or shallower (user prefixes)
+    than the discovered frontier; pinned-high dominates on conflict."""
+    from repro.search.driver import _frontier_hints
+
+    args = _toy_args()
+    closed = jax.make_jaxpr(_toy)(*args)
+    scopes = search.discover_scopes(closed)
+    deep = _frontier_hints({"mlp/deeper/site": 5, "mlp": 7}, scopes)
+    assert deep["mlp"] == 7                  # finest prediction wins
+    pinned = _frontier_hints({"mlp/deeper": None, "mlp": 7}, scopes)
+    assert pinned["mlp"] is None             # pin dominates
+    assert "attn" not in deep                # unhinted scopes stay unhinted
+    with pytest.raises(TypeError, match="ladder_hints"):
+        search.autosearch(_toy, args, search.rel_error, 8,
+                          warm_start="not-a-mapping")
+
+
+def test_warm_start_profile_to_search_on_sod():
+    """The full tentpole loop on the smallest app: profile_trajectory ->
+    blame -> ladder_hints -> autosearch. Assignments must match the
+    unguided search with strictly fewer probe dispatches (the ISSUE
+    acceptance, small-config tier-1 slice; bench_model and the full trio
+    run in the @slow tier)."""
+    from repro.apps import get_app
+
+    app = get_app("sod", n_cells=32, t_end=0.04)
+    state = app.init_state(jnp.float32)
+    r0 = search.autosearch(app.run_observables, (state,),
+                           metric=app.error_metric, budget=48,
+                           threshold=app.search_threshold)
+    hints = app.warm_hints(state)
+    r1 = search.autosearch(app.run_observables, (state,),
+                           metric=app.error_metric, budget=48,
+                           threshold=app.search_threshold, warm_start=hints)
+    assert _assigns(r1) == _assigns(r0)
+    assert r1.final_error == r0.final_error
+    assert r1.n_dispatches < r0.n_dispatches, (r0.n_dispatches,
+                                               r1.n_dispatches)
+    assert r1.evals_used < r0.evals_used
+
+
+@pytest.mark.slow
+def test_warm_start_acceptance_miniapps_and_bench_model():
+    """ISSUE acceptance: the error-guided warm start reduces probe
+    dispatches on all three mini-apps AND the bench model while producing
+    identical final scope assignments (non-binding budgets, so the
+    unguided baseline fully probes its ladder)."""
+    from repro.apps import get_app
+    from benchmarks.common import bench_model, bench_batch
+    from repro.core import profile_trajectory
+    from repro.core.formats import FPFormat
+    from repro.profile import ladder_hints
+
+    small = {"sod": dict(n_cells=32, t_end=0.04),
+             "heat": dict(n=8, n_explicit=8, n_implicit=1, cg_iters=6),
+             "poisson": dict(n=8, cg_iters=12)}
+    for name, cfg in small.items():
+        app = get_app(name, **cfg)
+        state = app.init_state(jnp.float32)
+        thr = 5e-2 if name == "poisson" else app.search_threshold
+        r0 = search.autosearch(app.run_observables, (state,),
+                               metric=app.error_metric, budget=48,
+                               threshold=thr)
+        hints = app.warm_hints(state, threshold=thr)
+        r1 = search.autosearch(app.run_observables, (state,),
+                               metric=app.error_metric, budget=48,
+                               threshold=thr, warm_start=hints)
+        assert _assigns(r1) == _assigns(r0), name
+        assert r1.n_dispatches < r0.n_dispatches, (name, r0.n_dispatches,
+                                                   r1.n_dispatches)
+
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    budget, thr = 128, 5e-3   # non-binding: 17 scopes x 6-rung ladder fits
+    r0 = search.autosearch(model.loss, (params, batch),
+                           search.loss_degradation, budget, threshold=thr)
+    probe = TruncationPolicy(rules=tuple(
+        search.driver.TruncationRule(fmt=FPFormat(8, 5), scope=p)
+        for p in r0.assignments))
+    out_lo, traj = profile_trajectory(model.loss, probe, thr,
+                                      n_steps=8)(params, batch)
+    joint = search.loss_degradation((model.loss(params, batch),), (out_lo,))
+    hints = ladder_hints(traj, search.DEFAULT_WIDTHS, thr, 5,
+                         joint_metric=joint)
+    r1 = search.autosearch(model.loss, (params, batch),
+                           search.loss_degradation, budget, threshold=thr,
+                           warm_start=hints)
+    assert _assigns(r1) == _assigns(r0)
+    assert r1.n_dispatches < r0.n_dispatches, (r0.n_dispatches,
+                                               r1.n_dispatches)
+    assert r1.evals_used < r0.evals_used
+
+
 def test_metrics_flag_nonfinite():
     assert search.rel_error(jnp.float32(1.0), jnp.float32(jnp.nan)) == float("inf")
     assert search.loss_degradation((jnp.float32(2.0),),

@@ -189,6 +189,105 @@ def test_sharded_ladder_single_compile_multi_probe_per_device():
     assert out["consistent"]
 
 
+def test_trajectory_reduces_exactly_under_mesh():
+    """profile_trajectory over a (probe=2, data=4) mesh: every signal the
+    temporal analysis decides on — per-step max deviation, op counts, the
+    step counter — must equal the single-device trajectory bit-for-bit on
+    both the GSPMD path and the shard_map + TrajectoryReport.allreduce
+    path. The float SUM buffers (abs_sum/mag_sum) are exact up to
+    cross-shard summation order (the usual float-reduction contract), so
+    they are pinned to tight allclose instead."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.core import profile_trajectory
+
+        mesh = make_profile_mesh(2, 4)
+        pol = TruncationPolicy.everywhere("e5m2")
+
+        def _steps(w1, w2, x):
+            def body(c, _):
+                with scope("mlp"):
+                    c = jnp.tanh(c @ w2)
+                return c, None
+            h, _ = lax.scan(body, jnp.tanh(x @ w1), None, length=5)
+            return h * h          # per-example output (shard_map-exact)
+
+        args2 = args
+        out0, t0 = profile_trajectory(_steps, pol, 1e-3, n_steps=6)(*args2)
+        sh = [None, None, batch_sharding(mesh, "data")]
+        out1, t1 = profile_trajectory(_steps, pol, 1e-3, n_steps=6,
+                                      mesh=mesh, in_shardings=sh)(*args2)
+
+        def eqs(a, b):
+            return bool(np.array_equal(jax.device_get(a), jax.device_get(b)))
+
+        def body(w1, w2, xs):
+            _, t = profile_trajectory(_steps, pol, 1e-3, n_steps=6)(
+                w1, w2, xs)
+            return t.allreduce("data")
+
+        t2 = shard_map(body, mesh=mesh,
+                       in_specs=(P(), P(), P("data")),
+                       out_specs=P(), check_rep=False)(*args2)
+
+        def close(a, b):
+            return bool(np.allclose(jax.device_get(a), jax.device_get(b),
+                                    rtol=1e-5, atol=1e-5))
+
+        print("RESULT" + json.dumps({
+            "gspmd": all(eqs(getattr(t0, k), getattr(t1, k))
+                         for k in ("max_rel", "op_counts", "steps_seen")),
+            "smap": all(eqs(getattr(t0, k), getattr(t2, k))
+                        for k in ("max_rel", "op_counts", "steps_seen")),
+            "gspmd_sums": (close(t0.abs_sum, t1.abs_sum)
+                           and close(t0.mag_sum, t1.mag_sum)),
+            "smap_sums": (close(t0.abs_sum, t2.abs_sum)
+                          and close(t0.mag_sum, t2.mag_sum)),
+            "steps": int(jax.device_get(t0.steps_seen)),
+            "any_err": float(np.sum(jax.device_get(t0.abs_sum))) > 0,
+            "out_eq": eqs(out0, out1),
+        }))
+    """))
+    assert out["gspmd"], "sharded trajectory diverged from single-device"
+    assert out["smap"], "allreduced per-shard trajectories diverged"
+    assert out["gspmd_sums"] and out["smap_sums"]
+    assert out["steps"] == 5 and out["any_err"] and out["out_eq"]
+
+
+def test_sharded_autosearch_dispatch_stats_match_unsharded():
+    """Identity-padded candidate rows must never leak into accounting:
+    with a ladder whose logical width (7) does NOT divide the probe axis
+    (8), the sharded search must report bit-identical n_dispatches,
+    max_dispatch_rows, evals and history to the unsharded run — padding
+    only widens the physical signature (probe_batch)."""
+    out = _run_subproc(_PRELUDE + textwrap.dedent("""
+        mesh = make_probe_mesh()   # 8 devices; k_logical = 6 + 1 = 7
+        kw = dict(threshold=1e-2, budget=48)
+        r0 = search.autosearch(_toy, args, search.rel_error, **kw)
+        r1 = search.autosearch(_toy, args, search.rel_error, mesh=mesh, **kw)
+        a0 = {p: [a.man_bits, a.excluded] for p, a in r0.assignments.items()}
+        a1 = {p: [a.man_bits, a.excluded] for p, a in r1.assignments.items()}
+        print("RESULT" + json.dumps({
+            "same": a0 == a1,
+            "evals": [r0.evals_used, r1.evals_used],
+            "dispatches": [r0.n_dispatches, r1.n_dispatches],
+            "max_rows": [r0.max_dispatch_rows, r1.max_dispatch_rows],
+            "history": r0.history == r1.history,
+            "k": [r0.probe_batch, r1.probe_batch],
+            "ndev": r1.n_devices,
+        }))
+    """))
+    assert out["same"]
+    assert out["evals"][0] == out["evals"][1]
+    assert out["dispatches"][0] == out["dispatches"][1], out
+    assert out["max_rows"][0] == out["max_rows"][1], out
+    assert out["history"]
+    # the physical batch IS padded (7 -> 8): the contract is that padding
+    # never shows up in the derived stats, not that it doesn't exist
+    assert out["k"] == [7, 8] and out["ndev"] == 8
+
+
 def test_autosearch_mesh_matches_single_device_bench_model():
     """Acceptance: autosearch on the bench model over an 8-device host
     probe mesh returns the SAME per-scope assignments as the single-device

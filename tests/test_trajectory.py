@@ -1,0 +1,340 @@
+"""Instability profiling: per-step trajectories, onset/blame, report
+reductions, and the ladder_hints bridge into the warm-started search.
+
+Merge/allreduce edge cases mirror tests/test_report_merge.py for the
+trajectory pytree (single-step buffers, mismatched step counts, the
+empty-location-table sentinel).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import (
+    memtrace, profile_trajectory, TruncationPolicy, TrajectoryReport, scope,
+)
+from repro.core.memmode import RaptorReport
+from repro.profile import ladder_hints, scope_of_location
+
+
+def _get(x):
+    return np.asarray(jax.device_get(x))
+
+
+# exact vs lossy per-step factors: x2.0 only shifts the exponent (exact in
+# every e?m? format), x1.09 rounds at 2 mantissa bits
+EXACT, LOSSY = 2.0, 1.09
+
+
+def _staged(n_exact: int, n_total: int):
+    """A stepped workload whose truncation error first appears at step
+    ``n_exact``: earlier steps multiply by an exactly-representable factor."""
+    def f(x):
+        def body(c, t):
+            with scope("stage"):
+                fac = jnp.where(t < n_exact, jnp.asarray(EXACT, c.dtype),
+                                jnp.asarray(LOSSY, c.dtype))
+                c = c * fac
+            return c, None
+        y, _ = lax.scan(body, x, jnp.arange(n_total, dtype=jnp.int32))
+        return jnp.sum(y)
+    return f
+
+
+def _profile(fn, x, n_steps, fmt="e5m2", threshold=1e-3):
+    return profile_trajectory(fn, TruncationPolicy.everywhere(fmt),
+                              threshold, n_steps=n_steps)(x)
+
+
+def test_trajectory_totals_match_memtrace():
+    """The trajectory report's whole-run totals are bit-identical to plain
+    mem-mode, and outputs are unchanged."""
+    f = _staged(0, 6)
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    out_t, traj = _profile(f, x, n_steps=8)
+    out_m, rep = memtrace(f, TruncationPolicy.everywhere("e5m2"), 1e-3)(x)
+    assert float(out_t) == float(out_m)
+    assert isinstance(traj, TrajectoryReport)
+    assert traj.locations == rep.locations
+    for a, b in ((traj.totals.flags, rep.flags),
+                 (traj.totals.max_rel, rep.max_rel),
+                 (traj.totals.op_counts, rep.op_counts)):
+        np.testing.assert_array_equal(_get(a), _get(b))
+
+
+def test_divergence_onset_detected_at_the_right_step():
+    """Error that first appears at scan iteration k>0 must onset exactly
+    there — the signal plain mem-mode collapses away."""
+    k, n = 3, 8
+    out, traj = _profile(_staged(k, n), jnp.asarray([1.0, 1.5], jnp.float32),
+                         n_steps=n + 1)
+    assert int(_get(traj.steps_seen)) == n
+    (i,) = [j for j, s in enumerate(traj.scopes) if s == "stage"]
+    onsets = traj.onset_steps(1e-3)
+    assert onsets[i] == k
+    # per-step rows: exact steps carry zero deviation, lossy steps don't
+    m = _get(traj.max_rel)
+    assert np.all(m[:k, i] == 0.0)
+    assert np.all(m[k:n, i] > 0.0)
+    blame = traj.blame(1e-3)
+    assert blame[0].scope == "stage" and blame[0].onset == k
+
+
+def test_onset_through_while_loop_carry():
+    """Trajectory stats thread the while carry: a deviation appearing only
+    after while-iteration k>1 is recorded at that step, and op counts
+    reflect every iteration."""
+    k, n = 2, 5
+
+    def f(x):
+        def cond(c):
+            return c[0] < n
+
+        def body(c):
+            i, v = c
+            with scope("w"):
+                fac = jnp.where(i < k, jnp.asarray(EXACT, v.dtype),
+                                jnp.asarray(LOSSY, v.dtype))
+                v = v * fac
+            return (i + 1, v)
+
+        return jnp.sum(lax.while_loop(cond, body, (jnp.int32(0), x))[1])
+
+    out, traj = _profile(f, jnp.asarray([1.0, 2.0], jnp.float32), n_steps=n)
+    (i,) = [j for j, s in enumerate(traj.scopes) if s == "w"]
+    assert int(_get(traj.steps_seen)) == n
+    assert traj.onset_steps(1e-3)[i] == k
+    # all n iterations counted (2 elements each)
+    assert int(_get(traj.op_counts)[:, i].sum()) == 2 * n
+
+
+def test_ring_buffer_wraps_and_reports_steps_seen():
+    n = 10
+    out, traj = _profile(_staged(0, n), jnp.asarray([1.0], jnp.float32),
+                         n_steps=4)
+    assert traj.n_steps == 4
+    assert int(_get(traj.steps_seen)) == n
+    assert traj.used_rows() == 4
+    # wrapped rows still carry data for the folded steps
+    (i,) = [j for j, s in enumerate(traj.scopes) if s == "stage"]
+    assert np.all(_get(traj.op_counts)[:, i] > 0)
+
+
+def test_post_loop_ops_visible_to_blame():
+    """Truncated ops AFTER the outermost loop accumulate in the trailing
+    row (index steps_seen); the analysis must see that row — a site whose
+    only errors are post-loop must not rank as fully stable."""
+    n = 3
+
+    def f(x):
+        def body(c, _):
+            with scope("loop"):
+                c = c * jnp.asarray(2.0, c.dtype)   # exact: no deviation
+            return c, None
+        y, _ = lax.scan(body, x, None, length=n)
+        with scope("tail"):
+            return jnp.sum(y * jnp.asarray(1.09, y.dtype))
+
+    out, traj = _profile(f, jnp.asarray([1.0, 2.0], jnp.float32),
+                         n_steps=n + 1)
+    assert int(_get(traj.steps_seen)) == n
+    assert traj.used_rows() == n + 1
+    idxs = [j for j, s in enumerate(traj.scopes) if s == "tail"]
+    assert idxs
+    onsets = traj.onset_steps(1e-3)
+    assert all(onsets[i] == n for i in idxs)       # the trailing row
+    blame = {b.scope: b for b in traj.blame(1e-3)}
+    assert blame["tail"].peak_rel > 0 and blame["tail"].onset == n
+
+
+def test_straight_line_program_lands_in_row_zero():
+    def f(x):
+        with scope("s"):
+            return jnp.sum(x * 1.09)
+
+    out, traj = _profile(f, jnp.asarray([1.0, 2.0], jnp.float32), n_steps=3)
+    assert int(_get(traj.steps_seen)) == 0
+    assert traj.used_rows() == 1
+    assert int(_get(traj.op_counts)[0].sum()) > 0
+    assert int(_get(traj.op_counts)[1:].sum()) == 0
+
+
+# --------------------------------------------------------------------------
+# merge / allreduce edge cases (mirroring test_report_merge.py)
+# --------------------------------------------------------------------------
+
+def _traj(locs, scopes, max_rel, abs_sum, mag_sum, ops, steps):
+    totals = RaptorReport(tuple(locs),
+                          jnp.asarray(np.sum(np.asarray(ops), 0), jnp.int32),
+                          jnp.asarray(np.max(np.asarray(max_rel), 0),
+                                      jnp.float32),
+                          jnp.asarray(np.sum(np.asarray(ops), 0), jnp.int32))
+    return TrajectoryReport(
+        totals=totals, scopes=tuple(scopes),
+        max_rel=jnp.asarray(max_rel, jnp.float32),
+        abs_sum=jnp.asarray(abs_sum, jnp.float32),
+        mag_sum=jnp.asarray(mag_sum, jnp.float32),
+        op_counts=jnp.asarray(ops, jnp.int32),
+        steps_seen=jnp.int32(steps))
+
+
+def test_merge_sums_and_maxes_per_step():
+    a = _traj(["l0", "l1"], ["a", "b"], [[0.5, 0.0], [0.125, 0.25]],
+              [[1.0, 0.0], [0.5, 2.0]], [[4.0, 1.0], [4.0, 1.0]],
+              [[2, 1], [2, 1]], 2)
+    b = _traj(["l0", "l1"], ["a", "b"], [[0.25, 1.5], [0.0, 0.0]],
+              [[1.0, 1.0], [0.5, 0.0]], [[4.0, 1.0], [4.0, 1.0]],
+              [[2, 1], [2, 1]], 2)
+    m = a.merge(b)
+    assert _get(m.max_rel).tolist() == [[0.5, 1.5], [0.125, 0.25]]
+    assert _get(m.abs_sum).tolist() == [[2.0, 1.0], [1.0, 2.0]]
+    assert _get(m.op_counts).tolist() == [[4, 2], [4, 2]]
+    assert int(_get(m.steps_seen)) == 2
+
+
+def test_merge_single_step_buffer():
+    a = _traj(["l0"], ["s"], [[0.5]], [[1.0]], [[2.0]], [[3]], 1)
+    m = TrajectoryReport.merge_all([a])
+    assert m is a  # single shard: identity, no copy
+    m2 = a.merge(a)
+    assert m2.n_steps == 1
+    assert _get(m2.op_counts).tolist() == [[6]]
+
+
+def test_merge_mismatched_step_counts_raises():
+    a = _traj(["l0"], ["s"], [[0.5]], [[1.0]], [[2.0]], [[3]], 1)
+    b = _traj(["l0"], ["s"], [[0.5], [0.5]], [[1.0], [1.0]],
+              [[2.0], [2.0]], [[3], [3]], 2)
+    with pytest.raises(ValueError, match="step buffers differ"):
+        a.merge(b)
+
+
+def test_merge_mismatched_locations_raises():
+    a = _traj(["l0"], ["s"], [[0.5]], [[1.0]], [[2.0]], [[3]], 1)
+    b = _traj(["OTHER"], ["s"], [[0.5]], [[1.0]], [[2.0]], [[3]], 1)
+    with pytest.raises(ValueError, match="location tables differ"):
+        a.merge(b)
+
+
+def test_merge_all_empty_raises():
+    with pytest.raises(ValueError, match="at least one report"):
+        TrajectoryReport.merge_all([])
+
+
+def test_empty_location_table_sentinel():
+    """A computation with no truncated locations produces the sentinel
+    single-location report; merging and analysing it must stay consistent."""
+    def f(x):
+        return x * 2.0
+
+    out, traj = profile_trajectory(f, TruncationPolicy(rules=()), 1e-3,
+                                   n_steps=2)(jnp.ones((3,), jnp.float32))
+    assert traj.locations == ("<no truncated locations>",)
+    assert traj.scopes == ("",)
+    m = traj.merge(traj)
+    assert int(_get(m.op_counts).sum()) == 0
+    assert traj.blame(1e-3) == []          # the sentinel is never blamed
+    assert traj.onset_steps(1e-3).tolist() == [-1]
+
+
+def test_allreduce_on_single_device_mesh():
+    """allreduce is the in-SPMD reduction; on a 1-shard mesh it must be the
+    identity (psum/pmax over one shard)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    f = _staged(1, 4)
+    x = jnp.asarray([1.0, 2.0], jnp.float32)
+    out0, t0 = _profile(f, x, n_steps=4)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+    def body(xs):
+        _, t = profile_trajectory(
+            f, TruncationPolicy.everywhere("e5m2"), 1e-3, n_steps=4)(xs)
+        return t.allreduce("data")
+
+    t1 = shard_map(body, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+                   check_rep=False)(x)
+    for name in ("max_rel", "abs_sum", "mag_sum", "op_counts", "steps_seen"):
+        np.testing.assert_array_equal(_get(getattr(t0, name)),
+                                      _get(getattr(t1, name)))
+
+
+# --------------------------------------------------------------------------
+# blame -> warm-start hints
+# --------------------------------------------------------------------------
+
+def test_scope_of_location():
+    assert scope_of_location("hydro/eos div @ sod.py:81") == "hydro/eos"
+    assert scope_of_location("<root> add @ f.py:1") == ""
+    assert scope_of_location("<no truncated locations>") == ""
+    # autodiff decorations normalize away
+    assert scope_of_location("transpose(jvp(mlp))/dot mul @ m.py:3") == \
+        "mlp/dot"
+
+
+def test_ladder_hints_stable_aggressive_unstable_pinned():
+    widths = (23, 15, 10, 7, 5, 3, 2)
+    # two scopes profiled at m5: one bit-exact, one catastrophically off
+    t = _traj(["a x @ f:1", "b x @ f:2"], ["calm", "wild"],
+              [[0.0, 1.9]], [[0.0, 8.0]], [[4.0, 4.0]], [[4, 4]], 1)
+    hints = ladder_hints(t, widths, threshold=1e-3, probe_man_bits=5)
+    assert hints["calm"] == 2          # aggressive: narrowest rung
+    assert hints["wild"] is None       # pinned high: off the ladder's end
+    # calibration rescales every peak so the worst scope predicts the
+    # measured joint metric: with joint == threshold the worst scope is
+    # predicted admissible at (about) the probe width itself
+    hints_cal = ladder_hints(t, widths, threshold=1e-3, probe_man_bits=5,
+                             joint_metric=1e-3, margin=0)
+    assert hints_cal["wild"] == 5
+    assert hints_cal["calm"] == 2
+
+
+def test_ladder_hints_nonfinite_peak_pins():
+    t = _traj(["a x @ f:1"], ["boom"], [[np.inf]], [[np.inf]], [[1.0]],
+              [[4]], 1)
+    hints = ladder_hints(t, (23, 10, 2), threshold=1e-3, probe_man_bits=5)
+    assert hints["boom"] is None
+
+
+def test_profile_trajectory_validates_and_caches():
+    with pytest.raises(ValueError, match="n_steps"):
+        profile_trajectory(lambda x: x, TruncationPolicy(rules=()),
+                           n_steps=0)
+    f = _staged(0, 3)
+    wrapped = profile_trajectory(f, TruncationPolicy.everywhere("e5m2"),
+                                 1e-3, n_steps=3)
+    x = jnp.asarray([1.0], jnp.float32)
+    r1 = wrapped(x)
+    r2 = wrapped(x)
+    assert wrapped.n_traces == 1       # trace-cached like memtrace
+    np.testing.assert_array_equal(_get(r1[1].max_rel), _get(r2[1].max_rel))
+
+
+# --------------------------------------------------------------------------
+# the tier-1 smoke of the ISSUE acceptance: HeatDiffusion's explicit stencil
+# --------------------------------------------------------------------------
+
+def test_heat_blame_pinpoints_stencil_onset_under_e5m2():
+    """On the small heat config the blame ranking must (a) localize the
+    explicit-stencil scope's divergence onset inside the explicit phase and
+    (b) place the implicit-phase scopes' onset exactly at the phase switch —
+    the 'when, not just how much' capability of the subsystem."""
+    from repro.apps import get_app
+
+    app = get_app("heat", n=8, n_explicit=8, n_implicit=1, cg_iters=6)
+    obs, traj = app.profile_trajectory(
+        policy=app.uniform_policy("e5m2"), threshold=1e-3)
+    assert int(_get(traj.steps_seen)) == app.n_steps
+    blame = {b.scope: b for b in traj.blame(1e-3)}
+    st = blame["heat/stencil"]
+    assert st.onset is not None and 0 <= st.onset < app.n_explicit
+    for sc, b in blame.items():
+        if sc.startswith("heat/implicit"):
+            # implicit scopes only run after the explicit phase: their
+            # first threshold crossing is the phase-switch step
+            assert b.onset is None or b.onset >= app.n_explicit
+    assert any(sc.startswith("heat/implicit") and b.onset == app.n_explicit
+               for sc, b in blame.items())
