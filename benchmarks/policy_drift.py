@@ -1,0 +1,133 @@
+"""Policy-drift gate: re-search bench_model and diff against the committed
+policy artifact.
+
+    PYTHONPATH=src python -m benchmarks.policy_drift            # --check
+    PYTHONPATH=src python -m benchmarks.policy_drift --refresh
+
+The committed artifact (``artifacts/bench_model.json``, the bare
+``PolicyArtifact`` JSON form) is the *deployed* precision policy for the
+bench model: serving loads it by name, training hot-swaps it, checkpoints
+record its digest. This gate runs the same autosearch CI always ran
+(budget=128, threshold=5e-3 — the @slow acceptance test's parameters) and
+fails when the fresh per-scope ASSIGNMENTS drift from the committed ones,
+printing a side-by-side diff. Timing-like provenance (wall clock, history)
+is deliberately not gated — only what changes numerics in deployment:
+which scopes are truncated, to how many mantissa bits, and what is
+excluded.
+
+Drift is not automatically a bug — an interpreter or search change may
+legitimately move an assignment — but it must be *deliberate*: refresh and
+commit the artifact in the same PR so reviewers see the policy change
+side by side with the code change that caused it:
+
+    PYTHONPATH=src python -m benchmarks.policy_drift --refresh
+    git add artifacts/bench_model.json
+
+Exit status: 0 = no drift, 1 = drift or missing artifact, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+COMMITTED = "artifacts/bench_model.json"
+BUDGET, THRESHOLD = 128, 5e-3   # match tests/test_search.py @slow acceptance
+
+
+def fresh_artifact():
+    """Run the gate's autosearch: bench_model under loss degradation."""
+    from benchmarks.common import bench_model, bench_batch
+    from repro import search
+
+    cfg, model, params = bench_model()
+    batch = bench_batch(cfg)
+    res = search.autosearch(model.loss, (params, batch),
+                            search.loss_degradation, BUDGET,
+                            threshold=THRESHOLD)
+    return res.to_artifact("bench_model")
+
+
+def _assignment_rows(artifact):
+    """{scope: (man_bits_or_None, excluded)} — the gated surface."""
+    return {path: (None if row.man_bits is None else int(row.man_bits),
+                   bool(row.excluded))
+            for path, row in artifact.assignments.items()}
+
+
+def _fmt(entry):
+    if entry is None:
+        return "--"
+    man, excl = entry
+    if excl:
+        return "excluded"
+    return "fp32" if man is None or man >= 23 else f"m={man}"
+
+
+def diff_assignments(committed, fresh, log=print):
+    """Side-by-side diff of per-scope assignments; returns drift lines."""
+    base, new = _assignment_rows(committed), _assignment_rows(fresh)
+    scopes = sorted(set(base) | set(new))
+    width = max([len(s) for s in scopes] + [len("scope")])
+    log(f"  {'scope':<{width}}  {'committed':>10}  {'fresh':>10}")
+    drift = []
+    for s in scopes:
+        b, n = base.get(s), new.get(s)
+        bad = b != n
+        log(f"  {s:<{width}}  {_fmt(b):>10}  {_fmt(n):>10}"
+            f"{'  <-- DRIFT' if bad else ''}")
+        if bad:
+            drift.append(f"{s}: {_fmt(b)} -> {_fmt(n)}")
+    return drift
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--committed", default=COMMITTED,
+                    help=f"committed artifact JSON (default {COMMITTED})")
+    ap.add_argument("--refresh", action="store_true",
+                    help="re-search and overwrite the committed artifact "
+                         "instead of gating against it")
+    args = ap.parse_args(argv)
+
+    from repro.artifacts import load_artifact_file, save_artifact_file
+
+    print(f"policy-drift: autosearch bench_model "
+          f"(budget={BUDGET}, threshold={THRESHOLD})", flush=True)
+    fresh = fresh_artifact()
+    prov = fresh.provenance
+    print(f"  searched {prov.get('n_sites', '?')} sites, "
+          f"{prov.get('evals_used', '?')} evals, "
+          f"final_error={prov.get('final_error', float('nan')):.2e}, "
+          f"digest {fresh.digest[:12]}", flush=True)
+
+    if args.refresh:
+        save_artifact_file(fresh, args.committed)
+        print(f"refreshed {args.committed} — commit it alongside the code "
+              f"change that moved the policy")
+        return 0
+
+    try:
+        committed = load_artifact_file(args.committed)
+    except FileNotFoundError:
+        print(f"no committed artifact at {args.committed}; run\n"
+              f"  PYTHONPATH=src python -m benchmarks.policy_drift --refresh\n"
+              f"and commit the result", file=sys.stderr)
+        return 1
+
+    drift = diff_assignments(committed, fresh)
+    if drift:
+        print(f"\npolicy-drift FAILED ({len(drift)} scope(s) moved):",
+              file=sys.stderr)
+        for d in drift:
+            print(f"  - {d}", file=sys.stderr)
+        print("if the new policy is intended, refresh + commit:\n"
+              "  PYTHONPATH=src python -m benchmarks.policy_drift --refresh",
+              file=sys.stderr)
+        return 1
+    print(f"policy-drift passed: {len(_assignment_rows(fresh))} scopes "
+          f"match {args.committed}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

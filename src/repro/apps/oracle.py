@@ -79,6 +79,24 @@ class OracleVerdict:
                 f"(budget {self.budget:.1e}, f32 floor {self.floor:.3e}) "
                 f"-> {'PASS' if self.passed else 'FAIL'}")
 
+    # ---- policy-artifact integration --------------------------------------
+    def to_json(self) -> dict:
+        return {"app": self.app, "error": float(self.error),
+                "budget": float(self.budget), "floor": float(self.floor),
+                "passed": self.passed}
+
+    @staticmethod
+    def from_json(data: dict) -> "OracleVerdict":
+        return OracleVerdict(app=str(data["app"]),
+                             error=float(data["error"]),
+                             budget=float(data["budget"]),
+                             floor=float(data["floor"]))
+
+    def attach(self, artifact):
+        """Stamp this verdict onto a ``PolicyArtifact`` (returns the new,
+        verdict-bearing artifact — artifacts are immutable)."""
+        return artifact.with_oracle(self)
+
 
 def verdict(app: MiniApp, cand_obs: Observables,
             ref_obs: Dict[str, np.ndarray] = None) -> OracleVerdict:

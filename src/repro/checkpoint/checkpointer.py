@@ -50,14 +50,29 @@ class Checkpointer:
 
     # ---- save ----------------------------------------------------------------
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
-             block: bool = False):
+             block: bool = False, policy_artifact: Optional[Any] = None):
+        """``policy_artifact``: the active precision policy's durable
+        identity — an ``repro.artifacts.ArtifactRef``, a ``PolicyArtifact``
+        (name + content digest recorded), or a plain ``{name, version,
+        digest}`` dict. Recorded in ``manifest.json`` so a restored run can
+        re-load (and hash-verify) the exact policy it was training under."""
         flat = _flatten(tree)   # device_get on the caller thread (consistent)
         treedef = jax.tree_util.tree_structure(tree)
+        if policy_artifact is not None and not isinstance(
+                policy_artifact, dict):
+            if hasattr(policy_artifact, "to_json") and hasattr(
+                    policy_artifact, "version"):
+                policy_artifact = policy_artifact.to_json()   # ArtifactRef
+            else:                                             # PolicyArtifact
+                policy_artifact = {"name": policy_artifact.name,
+                                   "version": None,
+                                   "digest": policy_artifact.digest}
         manifest = {
             "step": int(step),
             "treedef": str(treedef),
             "extra": extra or {},
             "process_count": jax.process_count(),
+            "policy_artifact": policy_artifact,
         }
         self.wait()
         if self.async_save and not block:

@@ -90,6 +90,22 @@ class FPFormat:
     def with_mantissa(self, man_bits: int) -> "FPFormat":
         return dataclasses.replace(self, man_bits=man_bits, name=None)
 
+    # --- lossless JSON round trip -------------------------------------------
+    def to_json(self) -> dict:
+        """Every field spelled out — unlike ``key`` (which elides the inf
+        convention) this can never alias two formats that round differently."""
+        return {"exp_bits": self.exp_bits, "man_bits": self.man_bits,
+                "saturate": self.saturate, "ieee_inf": self.ieee_inf,
+                "name": self.name}
+
+    @staticmethod
+    def from_json(data: dict) -> "FPFormat":
+        return FPFormat(exp_bits=int(data["exp_bits"]),
+                        man_bits=int(data["man_bits"]),
+                        saturate=bool(data["saturate"]),
+                        ieee_inf=bool(data["ieee_inf"]),
+                        name=data.get("name"))
+
 
 # --- registry of common formats ---------------------------------------------
 FP64 = FPFormat(11, 52, name="fp64")

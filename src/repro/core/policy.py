@@ -115,6 +115,14 @@ def magnitude_above(threshold: float) -> MaskFn:
     return fn
 
 
+class NotSerializableError(TypeError):
+    """A policy carries state that cannot round-trip through JSON — today
+    that means a rule with a ``mask`` callable (dynamic truncation
+    predicates are arbitrary Python closures). Raised loudly instead of
+    silently dropping the rule: a persisted artifact must reproduce the
+    policy bit-for-bit or refuse to exist."""
+
+
 # --------------------------------------------------------------------------
 # rules & policy
 # --------------------------------------------------------------------------
@@ -160,6 +168,37 @@ class TruncationRule:
                          id(self.mask)))
         return (self.fmt.cache_key, self.scope, self.from_width, self.ops,
                 self.exclude_ops, self.quantize_dot_inputs, mask_id)
+
+    def to_json(self) -> dict:
+        """Lossless JSON form. Mask-bearing rules raise
+        :class:`NotSerializableError` — a runtime predicate is a closure,
+        not data, and silently dropping it would persist a *different*
+        policy than the one in memory."""
+        if self.mask is not None:
+            raise NotSerializableError(
+                f"rule (scope={self.scope!r}) carries a dynamic mask fn "
+                f"{getattr(self.mask, '__name__', self.mask)!r}; mask "
+                "predicates are Python callables and cannot be serialized "
+                "into a policy artifact")
+        return {
+            "fmt": self.fmt.to_json(),
+            "scope": self.scope,
+            "from_width": self.from_width,
+            "ops": list(self.ops) if self.ops is not None else None,
+            "exclude_ops": list(self.exclude_ops),
+            "quantize_dot_inputs": self.quantize_dot_inputs,
+        }
+
+    @staticmethod
+    def from_json(data: dict) -> "TruncationRule":
+        ops = data.get("ops")
+        return TruncationRule(
+            fmt=FPFormat.from_json(data["fmt"]),
+            scope=data["scope"],
+            from_width=data.get("from_width"),
+            ops=tuple(ops) if ops is not None else None,
+            exclude_ops=tuple(data.get("exclude_ops", ())),
+            quantize_dot_inputs=bool(data.get("quantize_dot_inputs", False)))
 
     def matches(self, name_stack: str, prim_name: str, out_dtype) -> bool:
         if prim_name in STRUCTURAL_PRIMS:
@@ -235,6 +274,20 @@ class TruncationPolicy:
     def excluding(self, *scopes: str) -> "TruncationPolicy":
         return dataclasses.replace(self, excludes=self.excludes + tuple(scopes))
 
+    # ---- lossless JSON round trip -----------------------------------------
+    def to_json(self) -> dict:
+        """Serialize the full rule list + excludes. Raises
+        :class:`NotSerializableError` for mask-bearing rules (see
+        :meth:`TruncationRule.to_json`)."""
+        return {"rules": [r.to_json() for r in self.rules],
+                "excludes": list(self.excludes)}
+
+    @staticmethod
+    def from_json(data: dict) -> "TruncationPolicy":
+        return TruncationPolicy(
+            rules=tuple(TruncationRule.from_json(r) for r in data["rules"]),
+            excludes=tuple(data.get("excludes", ())))
+
     # ---- constructors -----------------------------------------------------
     @staticmethod
     def everywhere(fmt, **kw) -> "TruncationPolicy":
@@ -258,3 +311,22 @@ class TruncationPolicy:
             rules.append(TruncationRule(
                 fmt=FPFormat(int(e), int(m)), from_width=int(width)))
         return TruncationPolicy(rules=tuple(rules))
+
+
+def parse_policy(spec) -> Optional["TruncationPolicy"]:
+    """Parse a CLI policy spec into a :class:`TruncationPolicy`.
+
+    The one flag grammar shared by every launch entrypoint (train, serve):
+      * ``None`` / ``""``          -> ``None`` (no truncation)
+      * ``"scope:**/mlp=e5m7"``    -> scoped single-rule policy
+      * ``"64_to_5_14;32_to_3_8"`` -> RAPTOR width-conditional rules
+    Already-constructed policies pass through unchanged.
+    """
+    if not spec:
+        return None
+    if isinstance(spec, TruncationPolicy):
+        return spec
+    if spec.startswith("scope:"):
+        scope, fmt = spec[len("scope:"):].split("=")
+        return TruncationPolicy.scoped(scope, fmt)
+    return TruncationPolicy.from_flag(spec)

@@ -3,6 +3,13 @@ RAPTOR truncation policy (mixed-precision deployment study).
 
     PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b \
         [--policy "scope:**/mlp=fp16"] [--requests 8] [--new-tokens 16]
+
+Policies deploy either as raw flag strings (``--policy``) or — the
+profile→policy→deploy handoff — by registry name (``--policy-artifact
+bench_model@v3 [--registry artifacts]``): the named
+:class:`repro.artifacts.PolicyArtifact` is loaded from the file-backed
+registry and its searched policy applied to the decode step, so the exact
+assignment a profiling run produced is what serves traffic.
 """
 from __future__ import annotations
 
@@ -13,14 +20,27 @@ import numpy as np
 
 import jax
 
+from repro.artifacts import Registry, default_root
 from repro.configs.base import get_config
-from repro.core import truncate
+from repro.core.policy import parse_policy
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.train import parse_policy
 from repro.models import Model
 from repro.models.common import ParamDef
 from repro.serving.engine import Engine
+
+
+def resolve_policy(policy_flag, artifact_ref, registry_root=None):
+    """The serve-side policy resolution: an explicit ``--policy`` flag, or a
+    registry artifact by name. Returns (policy, artifact_or_None)."""
+    if policy_flag and artifact_ref:
+        raise SystemExit("--policy and --policy-artifact are exclusive")
+    if artifact_ref:
+        art = Registry(registry_root).load(artifact_ref)
+        print(f"loaded {art} from registry "
+              f"{registry_root or default_root()!r}", flush=True)
+        return art.policy, art
+    return parse_policy(policy_flag), None
 
 
 def main():
@@ -31,7 +51,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=64)
-    ap.add_argument("--policy", default=None)
+    ap.add_argument("--policy", default=None,
+                    help='raw spec: "scope:**/mlp=fp16" or "32_to_5_14"')
+    ap.add_argument("--policy-artifact", default=None,
+                    help='registry ref: "name" (latest) or "name@v3"')
+    ap.add_argument("--registry", default=None,
+                    help=f"registry root (default $RAPTOR_REGISTRY or "
+                         f"{default_root()!r})")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--production", dest="smoke", action="store_false")
     args = ap.parse_args()
@@ -49,12 +75,10 @@ def main():
         params = jax.tree_util.tree_map(
             jax.device_put, model.init(jax.random.PRNGKey(0)), sh)
 
-        policy = parse_policy(args.policy)
-        if policy is not None:
-            model.decode_step = truncate(model.decode_step, policy)  # type: ignore
-
+        policy, _ = resolve_policy(args.policy, args.policy_artifact,
+                                   args.registry)
         eng = Engine(model, params, batch_size=args.batch,
-                     max_seq_len=args.max_seq)
+                     max_seq_len=args.max_seq, policy=policy)
         rng = np.random.RandomState(0)
         for rid in range(args.requests):
             eng.submit(rid, rng.randint(1, cfg.vocab, args.prompt_len),

@@ -20,9 +20,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.artifacts import ArtifactRef, Registry, default_root
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import get_config
 from repro.core import TruncationPolicy
+# parse_policy moved to repro.core.policy (one flag grammar for every
+# entrypoint); re-exported here for backward compatibility
+from repro.core.policy import parse_policy  # noqa: F401
 from repro.data.pipeline import DataConfig, Pipeline, Prefetcher
 from repro.distributed import sharding as shd
 from repro.distributed.fault_tolerance import (
@@ -32,16 +36,9 @@ from repro.launch.mesh import make_production_mesh, make_host_mesh
 from repro.models import Model
 from repro.models.common import ParamDef
 from repro.optim.adamw import AdamWConfig, warmup_cosine
-from repro.train.trainer import TrainConfig, make_train_step, init_opt_state
-
-
-def parse_policy(spec):
-    if not spec:
-        return None
-    if spec.startswith("scope:"):
-        scope, fmt = spec[len("scope:"):].split("=")
-        return TruncationPolicy.scoped(scope, fmt)
-    return TruncationPolicy.from_flag(spec)
+from repro.train.trainer import (
+    TrainConfig, make_hotswap_train_step, make_train_step, init_opt_state,
+)
 
 
 def main():
@@ -55,6 +52,17 @@ def main():
     ap.add_argument("--save-every", type=int, default=100)
     ap.add_argument("--policy", default=None,
                     help='RAPTOR spec: "32_to_5_14" or "scope:**/mlp=e5m7"')
+    ap.add_argument("--policy-artifact", default=None,
+                    help='registry ref ("name" or "name@v3"): train under '
+                         "the artifact's searched policy via runtime format "
+                         "tables (hot-swappable, zero recompile)")
+    ap.add_argument("--swap-artifact", action="append", default=[],
+                    metavar="STEP:REF",
+                    help="hot-swap to registry artifact REF at STEP "
+                         "(repeatable; requires --policy-artifact)")
+    ap.add_argument("--registry", default=None,
+                    help=f"artifact registry root (default $RAPTOR_REGISTRY "
+                         f"or {default_root()!r})")
     ap.add_argument("--smoke", action="store_true", default=True,
                     help="reduced config on the host mesh (CPU container)")
     ap.add_argument("--production", dest="smoke", action="store_false")
@@ -78,6 +86,27 @@ def main():
     print(f"arch={cfg.name} params={model.n_params()/1e6:.1f}M mesh={dict(mesh.shape)} "
           f"seq={seq} batch={gbatch}", flush=True)
 
+    # ---- precision-policy resolution --------------------------------------
+    # --policy bakes a flag policy into the trace; --policy-artifact loads a
+    # registry artifact and routes through runtime format tables instead, so
+    # --swap-artifact can deploy a different artifact mid-run with zero
+    # recompiles (the table is a step argument, not trace state).
+    if args.policy and args.policy_artifact:
+        raise SystemExit("--policy and --policy-artifact are exclusive")
+    if args.swap_artifact and not args.policy_artifact:
+        raise SystemExit("--swap-artifact requires --policy-artifact "
+                         "(the runtime-table training path)")
+    registry = Registry(args.registry) if args.policy_artifact else None
+    artifact = artifact_ref = None
+    swap_schedule = {}
+    if args.policy_artifact:
+        artifact, artifact_ref = registry.load_ref(args.policy_artifact)
+        print(f"policy artifact: {artifact_ref.ref} "
+              f"(digest {artifact_ref.digest[:12]})", flush=True)
+        for spec in args.swap_artifact:
+            at, _, ref = spec.partition(":")
+            swap_schedule[int(at)] = registry.load_ref(ref)
+
     tc = TrainConfig(
         optimizer=AdamWConfig(lr=args.lr),
         grad_accum=1 if args.smoke else cfg.grad_accum,
@@ -100,10 +129,26 @@ def main():
         params = jax.tree_util.tree_map(
             jax.device_put, model.init(jax.random.PRNGKey(0)), sh)
         opt = init_opt_state(model, params, tc)
-        step_fn = jax.jit(make_train_step(model, tc))
-
         state = {"params": params, "opt": opt}
         pf = Prefetcher(data)
+        peeked = []   # first prefetched batch, reused as the trace example
+
+        if artifact is not None:
+            peeked.append({k: jnp.asarray(v) for k, v in pf.next().items()})
+            # sites = the union of every artifact this run may deploy, so a
+            # swap is always a subset of the enumerated table rows
+            site_rules = tuple(artifact.policy.rules) + tuple(
+                r for art, _ in swap_schedule.values()
+                for r in art.policy.rules)
+            hot_step, sites = make_hotswap_train_step(
+                model, tc, TruncationPolicy(rules=site_rules),
+                state["params"], peeked[0])
+            step_fn = jax.jit(hot_step)
+            active = {"ref": artifact_ref,
+                      "table": sites.table_for(artifact.policy)}
+        else:
+            step_fn = jax.jit(make_train_step(model, tc))
+            sites = active = None
 
         def restore_fn() -> int:
             latest = ck.latest_step()
@@ -112,19 +157,43 @@ def main():
             (state["params"], state["opt"]), manifest = ck.restore(
                 (state["params"], state["opt"]))
             data.load_state_dict(manifest["extra"]["data"])
+            rec = manifest.get("policy_artifact")
+            if rec and active is not None:
+                # resume under the exact policy the checkpoint trained on:
+                # reload by recorded name and verify the content digest
+                art = registry.load(f"{rec['name']}@v{rec['version']}")
+                if art.digest != rec["digest"]:
+                    raise RuntimeError(
+                        f"registry artifact {rec['name']}@v{rec['version']} "
+                        f"digest {art.digest[:12]} != checkpoint-recorded "
+                        f"{rec['digest'][:12]}; refusing to resume under a "
+                        "different policy than the one trained on")
+                active["ref"] = ArtifactRef.from_json(rec)
+                active["table"] = sites.table_for(art.policy)
+                print(f"[supervisor] resumed policy {active['ref'].ref}",
+                      flush=True)
             print(f"[supervisor] restored step {latest}", flush=True)
             return latest
 
         def save_fn(step: int):
             ck.save(step, (state["params"], state["opt"]),
-                    extra={"data": data.state_dict()})
+                    extra={"data": data.state_dict()},
+                    policy_artifact=active["ref"] if active else None)
 
         t0 = time.time()
 
         def step_fn_supervised(step: int):
-            batch = {k: jnp.asarray(v) for k, v in pf.next().items()}
+            if active is not None and step in swap_schedule:
+                art, ref = swap_schedule[step]
+                active["ref"] = ref
+                active["table"] = sites.table_for(art.policy)
+                print(f"[policy] step {step}: hot-swapped to {ref.ref} "
+                      "(runtime table, zero recompile)", flush=True)
+            batch = (peeked.pop() if peeked
+                     else {k: jnp.asarray(v) for k, v in pf.next().items()})
+            extra = (active["table"],) if active is not None else ()
             state["params"], state["opt"], m = step_fn(
-                state["params"], state["opt"], batch, jnp.int32(step))
+                state["params"], state["opt"], batch, jnp.int32(step), *extra)
             if step % 10 == 0:
                 print(f"step {step:6d} loss {float(m['loss']):.4f} "
                       f"gnorm {float(m['grad_norm']):.3f} "

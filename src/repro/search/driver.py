@@ -60,10 +60,15 @@ def _frontier_hints(warm_start, scopes) -> Dict[str, Optional[int]]:
     probes a sibling site needs)."""
     if warm_start is None:
         return {}
+    if not hasattr(warm_start, "items") and hasattr(warm_start, "hints"):
+        # a PolicyArtifact (or anything carrying persisted hints): the
+        # blame-seeded warm start survives the process that computed it
+        warm_start = warm_start.hints
     if not hasattr(warm_start, "items"):
         raise TypeError(
             "warm_start must be a mapping of scope path -> predicted "
-            "mantissa width (None = pin to full precision); lower a "
+            "mantissa width (None = pin to full precision), or a "
+            "PolicyArtifact carrying such hints; lower a "
             "TrajectoryReport with repro.profile.ladder_hints first, "
             f"got {type(warm_start).__name__}")
     out: Dict[str, Optional[int]] = {}
@@ -138,6 +143,62 @@ class SearchResult:
             for path, a in self.assignments.items()
             if a.fmt(self.exp_bits) is not None)
         return TruncationPolicy(rules=rules)
+
+    def hints(self) -> Dict[str, Optional[int]]:
+        """This search's verdicts as warm-start hints for a later
+        ``autosearch(warm_start=...)``: truncated scopes predict their
+        assigned width; excluded or full-precision scopes pin high
+        (``None``), seeding the next bisection at the finest rung."""
+        return {path: (None if a.excluded or a.man_bits >= 23
+                       else a.man_bits)
+                for path, a in self.assignments.items()}
+
+    def to_artifact(self, name: str, *, hints=None, oracle=None,
+                    bench=None) -> "PolicyArtifact":
+        """Package the search into a versioned, serializable
+        :class:`repro.artifacts.PolicyArtifact`.
+
+        ``hints`` defaults to :meth:`hints` (the measured assignments); pass
+        the ``ladder_hints``/``MiniApp.warm_hints`` mapping that seeded this
+        search to persist the trajectory-blame predictions instead.
+        ``oracle`` takes an ``apps.oracle.OracleVerdict``; ``bench`` a BENCH
+        row dict. Raises ``NotSerializableError`` if the policy carries
+        mask-fn rules."""
+        from repro.artifacts import PolicyArtifact, ScopeRow
+        rows = {
+            path: ScopeRow(
+                man_bits=int(a.man_bits),
+                error_at_accept=float(a.error_at_accept),
+                excluded=bool(a.excluded),
+                flops=float(a.scope.flops),
+                fraction=float(a.scope.fraction),
+                n_eqns=int(a.scope.n_eqns))
+            for path, a in self.assignments.items()}
+        prov = {
+            "threshold": float(self.threshold),
+            "budget": int(self.budget),
+            "evals_used": int(self.evals_used),
+            "final_error": float(self.final_error),
+            "converged": bool(self.converged),
+            "exp_bits": int(self.exp_bits),
+            "n_compiles": int(self.n_compiles),
+            "n_sites": int(self.n_sites),
+            "n_dispatches": int(self.n_dispatches),
+            "n_warm_hints": int(self.n_warm_hints),
+            "probe_batch": int(self.probe_batch),
+            "max_dispatch_rows": int(self.max_dispatch_rows),
+            "n_devices": int(self.n_devices),
+            "history": [[tag, float(v)] for tag, v in self.history],
+        }
+        use_hints = dict(hints) if hints is not None else self.hints()
+        art = PolicyArtifact(name=name, policy=self.policy(),
+                             assignments=rows, provenance=prov,
+                             hints=use_hints)
+        if oracle is not None:
+            art = art.with_oracle(oracle)
+        if bench is not None:
+            art = art.with_bench(bench)
+        return art
 
     def table(self) -> str:
         """Per-scope format table — the textual analogue of the paper's

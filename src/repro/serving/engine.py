@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.api import truncate
 from repro.models import Model
 
 
@@ -28,24 +29,53 @@ class Request:
 
 
 class Engine:
+    """``policy`` deploys the engine under a RAPTOR truncation policy: a
+    :class:`~repro.core.TruncationPolicy` or a
+    :class:`~repro.artifacts.PolicyArtifact` (the registry-loaded product of
+    a profiling run — ``Registry(root).load("bench_model@v3")``). The decode
+    step is truncated once at construction; serving under an artifact is
+    bit-identical to serving under its in-process policy because the
+    artifact's JSON round trip is lossless."""
+
     def __init__(self, model: Model, params, batch_size: int = 8,
-                 max_seq_len: int = 512, greedy: bool = True):
+                 max_seq_len: int = 512, greedy: bool = True, policy=None):
         self.model = model
         self.params = params
         self.B = batch_size
         self.S = max_seq_len
         self.greedy = greedy
+        self.policy = getattr(policy, "policy", policy)  # artifact -> policy
         self.cache = model.init_cache(batch_size, max_seq_len)
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.lengths = np.zeros(batch_size, np.int32)
-        self._decode = jax.jit(model.decode_step)
+        step = model.decode_step
+        if self.policy is not None:
+            step = truncate(step, self.policy)
+        self._decode = jax.jit(step)
         self._queue: List[Request] = []
         self._done: Dict[int, Request] = {}
 
     # ---- request management ------------------------------------------------
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int = 32):
-        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                   max_new_tokens))
+        prompt = np.asarray(prompt, np.int32)
+        # validate HERE, not deep inside _admit: a prompt that can never fit
+        # the fixed cache must be rejected at the API boundary with a clear
+        # error instead of tripping an admission assert (or silently running
+        # the cache cursor past max_seq_len) requests later.
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(
+                f"request {rid}: prompt must be a non-empty 1-D token "
+                f"array, got shape {prompt.shape}")
+        if prompt.size > self.S - 1:
+            raise ValueError(
+                f"request {rid}: prompt of {prompt.size} tokens does not "
+                f"fit max_seq_len={self.S} (at most {self.S - 1} prompt "
+                "tokens leave room to decode at least one token)")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"request {rid}: max_new_tokens must be >= 1, "
+                f"got {max_new_tokens}")
+        self._queue.append(Request(rid, prompt, max_new_tokens))
 
     def _admit(self):
         """Admit a wave of queued requests into free slots. The cache keeps a

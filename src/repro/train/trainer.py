@@ -35,28 +35,7 @@ class TrainConfig:
     lr_schedule: Optional[Callable] = None          # step -> lr
 
 
-def make_train_step(model, tc: TrainConfig, grad_shardings=None):
-    """``grad_shardings``: optional pytree of NamedShardings (same structure
-    as params). Constraining gradients to the parameter sharding lets GSPMD
-    reduce-scatter the data-parallel gradient reduction instead of
-    all-reducing + re-sharding (EXPERIMENTS.md §Perf iteration 7)."""
-    cfg = model.cfg
-    accum = max(tc.grad_accum, 1)
-
-    def constrain_grads(g):
-        if grad_shardings is None:
-            return g
-        return jax.tree_util.tree_map(
-            lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
-            g, grad_shardings)
-
-    def loss_fn(params, micro_batch):
-        return model.loss(params, micro_batch)
-
-    grad_fn = jax.value_and_grad(loss_fn)
-    if tc.policy is not None:
-        grad_fn = truncate(grad_fn, tc.policy, impl=tc.policy_impl)
-
+def _split_micro_fn(accum: int):
     def split_micro(batch, i):
         def slice_one(x):
             if x.ndim == 0:
@@ -68,15 +47,32 @@ def make_train_step(model, tc: TrainConfig, grad_shardings=None):
             b = x.shape[0] // accum
             return lax.dynamic_slice_in_dim(x, i * b, b, axis=0)
         return jax.tree_util.tree_map(slice_one, batch)
+    return split_micro
 
-    def train_step(params, opt_state, batch, step):
+
+def _build_train_step(tc: TrainConfig, grad_fn, grad_shardings):
+    """The shared step body: microbatch accumulation, gradient compression,
+    the optimizer update. ``grad_fn(params, micro_batch, *extra) ->
+    (loss, grads)``; any ``*extra`` step arguments (e.g. the hot-swap
+    format table) are threaded through to every microbatch call."""
+    accum = max(tc.grad_accum, 1)
+    split_micro = _split_micro_fn(accum)
+
+    def constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            lambda t, sh: jax.lax.with_sharding_constraint(t, sh),
+            g, grad_shardings)
+
+    def train_step(params, opt_state, batch, step, *extra):
         if accum == 1:
-            loss, grads = grad_fn(params, batch)
+            loss, grads = grad_fn(params, batch, *extra)
             grads = constrain_grads(grads)
         else:
             def body(carry, i):
                 acc, loss_acc = carry
-                loss_i, g_i = grad_fn(params, split_micro(batch, i))
+                loss_i, g_i = grad_fn(params, split_micro(batch, i), *extra)
                 g_i = constrain_grads(g_i)
                 acc = jax.tree_util.tree_map(
                     lambda a, g: a + g.astype(jnp.float32), acc, g_i)
@@ -109,6 +105,74 @@ def make_train_step(model, tc: TrainConfig, grad_shardings=None):
         return params, new_state, metrics
 
     return train_step
+
+
+def make_train_step(model, tc: TrainConfig, grad_shardings=None):
+    """``grad_shardings``: optional pytree of NamedShardings (same structure
+    as params). Constraining gradients to the parameter sharding lets GSPMD
+    reduce-scatter the data-parallel gradient reduction instead of
+    all-reducing + re-sharding (EXPERIMENTS.md §Perf iteration 7)."""
+    def loss_fn(params, micro_batch):
+        return model.loss(params, micro_batch)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+    if tc.policy is not None:
+        grad_fn = truncate(grad_fn, tc.policy, impl=tc.policy_impl)
+
+    return _build_train_step(tc, grad_fn, grad_shardings)
+
+
+def make_hotswap_train_step(model, tc: TrainConfig, site_policy,
+                            example_params, example_batch,
+                            grad_shardings=None):
+    """A train step whose truncation policy is a RUNTIME argument.
+
+    ``make_train_step`` bakes ``tc.policy`` into the traced computation —
+    deploying a different policy means a retrace and an XLA recompile.
+    This factory instead enumerates every ``site_policy``-matched quantize
+    site of the differentiated loss into a runtime ``(num_sites, 4)`` format
+    table (PR 2's zero-recompile machinery, applied to training):
+
+        step_fn, sites = make_hotswap_train_step(model, tc, site_policy,
+                                                 params, batch)
+        table = sites.table_for(artifact.policy)   # or sites.identity_table()
+        params, opt, m = jit(step_fn)(params, opt, batch, step, table)
+        ...
+        table = sites.table_for(other_artifact.policy)   # hot swap: no
+        params, opt, m = jit(step_fn)(params, opt, batch, step, table)  # recompile
+
+    Returns ``(train_step, site_index)`` where ``train_step(params,
+    opt_state, batch, step, table)`` and ``site_index`` lowers any policy
+    whose matched set is a subset of ``site_policy``'s (e.g. a registry
+    artifact's) to its table. Swapping policy artifacts mid-run is a new
+    table *value* — same shapes, same executable, zero recompiles.
+
+    The differentiated loss is traced once here against
+    ``example_params``/``example_batch`` (a microbatch slice under grad
+    accumulation), so the profiled fwd+bwd jaxpr — RAPTOR's whole-call-tree
+    semantics — is exactly what the tables parameterize.
+    """
+    from repro.core import interpreter
+
+    accum = max(tc.grad_accum, 1)
+    micro = (example_batch if accum == 1
+             else _split_micro_fn(accum)(example_batch, 0))
+
+    grad_fn0 = jax.value_and_grad(
+        lambda params, micro_batch: model.loss(params, micro_batch))
+    closed, out_shape = jax.make_jaxpr(
+        grad_fn0, return_shape=True)(example_params, micro)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+    index = interpreter.enumerate_sites(closed, site_policy)
+
+    def grad_fn(params, micro_batch, table):
+        leaves = jax.tree_util.tree_leaves((params, micro_batch))
+        outs = interpreter.eval_sites(
+            closed.jaxpr, closed.consts, leaves,
+            jnp.asarray(table, jnp.int32), index, tc.policy_impl)
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+
+    return _build_train_step(tc, grad_fn, grad_shardings), index
 
 
 def init_opt_state(model, params, tc: TrainConfig):
