@@ -23,7 +23,8 @@ side by side with the code change that caused it:
     PYTHONPATH=src python -m benchmarks.policy_drift --refresh
     git add artifacts/bench_model.json
 
-Exit status: 0 = no drift, 1 = drift or missing artifact, 2 = usage error.
+Exit status: 0 = no drift, 1 = drift or missing/unreadable artifact,
+2 = usage error.
 """
 from __future__ import annotations
 
@@ -90,6 +91,29 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.artifacts import load_artifact_file, save_artifact_file
+    from repro.artifacts.artifact import ArtifactSchemaError
+
+    # In --check mode the committed artifact is validated BEFORE the
+    # expensive autosearch: a missing or schema-newer file must fail in
+    # milliseconds with the refresh command, not after minutes of search
+    # (and never with a raw traceback).
+    committed = None
+    if not args.refresh:
+        try:
+            committed = load_artifact_file(args.committed)
+        except FileNotFoundError:
+            print(f"no committed artifact at {args.committed}; run\n"
+                  f"  PYTHONPATH=src python -m benchmarks.policy_drift"
+                  f" --refresh\n"
+                  f"and commit the result", file=sys.stderr)
+            return 1
+        except ArtifactSchemaError as e:
+            print(f"committed artifact {args.committed} is not readable by "
+                  f"this build:\n  {e}\n"
+                  f"if the schema bump is intended, refresh + commit:\n"
+                  f"  PYTHONPATH=src python -m benchmarks.policy_drift"
+                  f" --refresh", file=sys.stderr)
+            return 1
 
     print(f"policy-drift: autosearch bench_model "
           f"(budget={BUDGET}, threshold={THRESHOLD})", flush=True)
@@ -105,14 +129,6 @@ def main(argv=None) -> int:
         print(f"refreshed {args.committed} — commit it alongside the code "
               f"change that moved the policy")
         return 0
-
-    try:
-        committed = load_artifact_file(args.committed)
-    except FileNotFoundError:
-        print(f"no committed artifact at {args.committed}; run\n"
-              f"  PYTHONPATH=src python -m benchmarks.policy_drift --refresh\n"
-              f"and commit the result", file=sys.stderr)
-        return 1
 
     drift = diff_assignments(committed, fresh)
     if drift:

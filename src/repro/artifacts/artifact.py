@@ -99,6 +99,16 @@ class PolicyArtifact:
     def with_hints(self, hints: Mapping) -> "PolicyArtifact":
         return dataclasses.replace(self, hints=dict(hints))
 
+    def with_guardrail_log(self, log) -> "PolicyArtifact":
+        """Attach a runtime intervention log (a
+        ``repro.guardrails.GuardrailLog`` or its JSON list) under
+        ``provenance["guardrail_log"]`` so checkpoints, serving, and CI can
+        audit what the guardrail controller did under this policy."""
+        data = log if isinstance(log, list) else log.to_json()
+        prov = dict(self.provenance)
+        prov["guardrail_log"] = data
+        return dataclasses.replace(self, provenance=prov)
+
     # ---- JSON round trip ---------------------------------------------------
     def to_json(self) -> dict:
         return {

@@ -24,6 +24,7 @@ import json
 import os
 import re
 import shutil
+import time
 from typing import List, Optional, Tuple
 
 from repro.artifacts.artifact import PolicyArtifact
@@ -81,11 +82,21 @@ class Registry:
 
     ``keep_k`` bounds versions per name (0 = keep everything); GC runs on
     save and, like the checkpointer, never removes the newest version.
+
+    ``retries``/``backoff``: a reader that races a concurrent publisher can
+    observe the torn window between the two save renames — a LATEST pointer
+    naming a version whose ``artifact.json`` has not landed yet, or a
+    ``.tmp_v*`` staging dir mid-publish. ``load`` retries with exponential
+    backoff *only* while the name dir shows that in-flight state; a
+    genuinely missing artifact still fails fast.
     """
 
-    def __init__(self, root: Optional[str] = None, keep_k: int = 0):
+    def __init__(self, root: Optional[str] = None, keep_k: int = 0,
+                 retries: int = 3, backoff: float = 0.05):
         self.root = root if root is not None else default_root()
         self.keep_k = keep_k
+        self.retries = retries
+        self.backoff = backoff
         os.makedirs(self.root, exist_ok=True)
 
     # ---- paths -------------------------------------------------------------
@@ -154,9 +165,23 @@ class Registry:
         return ArtifactRef(name=name, version=version,
                            digest=artifact.digest)
 
-    def load(self, ref: str) -> PolicyArtifact:
-        """Load ``"name"`` (latest) or ``"name@vN"`` (pinned)."""
-        name, version = parse_ref(ref)
+    def _publish_in_flight(self, name: str) -> bool:
+        """True if the name dir shows a concurrent publisher's torn window:
+        a LATEST pointer naming a version whose ``artifact.json`` has not
+        landed, or an unpublished staging dir/pointer tmp."""
+        base = self._name_dir(name)
+        if not os.path.isdir(base):
+            return False
+        ptr = os.path.join(base, "LATEST")
+        if os.path.exists(ptr):
+            with open(ptr) as f:
+                m = _VDIR_RE.match(f.read().strip())
+            if m and not os.path.exists(self.path(name, int(m.group(1)))):
+                return True
+        return any(d.startswith(".tmp_v") or d.startswith(".LATEST_tmp")
+                   for d in os.listdir(base))
+
+    def _load_once(self, name: str, version: Optional[int]) -> PolicyArtifact:
         if version is None:
             version = self.latest_version(name)
             if version is None:
@@ -172,6 +197,22 @@ class Registry:
                 f"(versions on disk: {have or 'none'})")
         with open(path) as f:
             return PolicyArtifact.loads(f.read())
+
+    def load(self, ref: str) -> PolicyArtifact:
+        """Load ``"name"`` (latest) or ``"name@vN"`` (pinned), with bounded
+        retry/backoff while a concurrent publisher's rename window is
+        visibly open (see class docstring)."""
+        name, version = parse_ref(ref)
+        delay = self.backoff
+        for attempt in range(self.retries + 1):
+            try:
+                return self._load_once(name, version)
+            except FileNotFoundError:
+                if attempt >= self.retries or not self._publish_in_flight(name):
+                    raise
+                time.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")  # pragma: no cover
 
     def load_ref(self, ref: str) -> Tuple[PolicyArtifact, ArtifactRef]:
         """Load plus the resolved durable identity (digest recomputed from

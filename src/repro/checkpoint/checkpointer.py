@@ -6,7 +6,7 @@ Layout per step:
         manifest.json       step, tree structure, mesh shape, data cursor
     <dir>/LATEST            atomic pointer file (rename())
 
-Guarantees exercised by tests/test_fault_tolerance.py:
+Guarantees exercised by tests/test_checkpoint_ft.py:
   * a kill between save() calls never corrupts the latest checkpoint
     (write to tmp dir + atomic rename, LATEST updated last)
   * restore() onto a *different* mesh re-shards via device_put with the new

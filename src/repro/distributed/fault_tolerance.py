@@ -1,7 +1,7 @@
 """Fault tolerance + elasticity scaffolding for multi-pod runs.
 
 What is mechanically testable on this CPU container is tested
-(tests/test_fault_tolerance.py): checkpoint/restart equivalence, elastic
+(tests/test_checkpoint_ft.py): checkpoint/restart equivalence, elastic
 re-shard onto a different mesh shape, data-cursor resume determinism, and
 the supervisor retry loop. The pieces that need real fleets are implemented
 as thin, documented seams:

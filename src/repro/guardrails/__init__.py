@@ -1,0 +1,45 @@
+"""Runtime numerical guardrails: fault injection, divergence-triggered
+precision escalation, and checkpoint-rollback recovery.
+
+The closed loop over PR 6's zero-recompile hot-swap machinery:
+
+  * :mod:`~repro.guardrails.faults` — inject faults as runtime transforms
+    of the ``(num_sites, 4)`` format table (plus the quantizer-level
+    bit-flip channel): zero recompiles, so chaos campaigns are cheap.
+  * :mod:`~repro.guardrails.monitor` — detect divergence online: non-finite
+    flags, loss-spike z-scores, and a windowed filter over sampled
+    trajectory probes (PR 5's machinery) that predicts budget crossings.
+  * :mod:`~repro.guardrails.controller` — recover via the escalation
+    ladder: widen blamed sites in the live table, roll back to the last
+    durable checkpoint under the escalated policy, finally degrade to the
+    FP32 baseline — every intervention recorded in a
+    :class:`~repro.guardrails.log.GuardrailLog` attachable to the deployed
+    :class:`~repro.artifacts.PolicyArtifact`'s provenance.
+
+See README.md §"Numerical guardrails" for a worked Sod-shock example and
+tests/test_chaos.py for the acceptance tier.
+"""
+# import the core package first: kernels/quantize_em/ops.py participates in
+# the repro.core import cycle and must not be the chain's entry point
+import repro.core  # noqa: F401
+
+from repro.guardrails.controller import (
+    EscalationLadder, GuardedLoop, GuardedTrainer, GuardrailConfig,
+    GuardResult, NumericalFaultError, make_guarded_app_loop,
+)
+from repro.guardrails.faults import (
+    FaultPlan, FaultSpec, bitflip_row, clean_row, overflow_row,
+    sites_for_scope,
+)
+from repro.guardrails.log import GuardrailLog, Intervention
+from repro.guardrails.monitor import (
+    StepMonitor, TrendFilter, Verdict, probe_blame,
+)
+
+__all__ = [
+    "EscalationLadder", "GuardedLoop", "GuardedTrainer", "GuardrailConfig",
+    "GuardResult", "NumericalFaultError", "make_guarded_app_loop",
+    "FaultPlan", "FaultSpec", "bitflip_row", "clean_row", "overflow_row",
+    "sites_for_scope", "GuardrailLog", "Intervention",
+    "StepMonitor", "TrendFilter", "Verdict", "probe_blame",
+]

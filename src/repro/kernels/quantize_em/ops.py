@@ -85,6 +85,22 @@ def quantize(x, fmt, *, impl: str = "auto"):
     return y.astype(dt)
 
 
+def _bitflip(y, fault):
+    """XOR bit ``fault - 1`` into every element's carrier bit pattern.
+
+    ``fault == 0`` is an exact no-op (the XOR mask is zero), so unarmed rows
+    are bit-identical to a quantizer without the fault channel. The bit
+    index addresses the carrier layout: f32 for <=32-bit floats (31 = sign,
+    30 = top exponent bit), f64 for f64 inputs."""
+    itype = jnp.int64 if y.dtype == jnp.dtype(jnp.float64) else jnp.int32
+    shift = jnp.maximum(fault - 1, 0).astype(itype)
+    mask = jnp.where(fault > 0,
+                     jnp.left_shift(jnp.asarray(1, itype), shift),
+                     jnp.asarray(0, itype))
+    bits = jax.lax.bitcast_convert_type(y, itype)
+    return jax.lax.bitcast_convert_type(bits ^ mask, y.dtype)
+
+
 def quantize_dynamic(x, fmt, *, impl: str = "auto"):
     """Runtime-parameterized ``quantize``: ``fmt`` is a (4,) int32 array
     (exp_bits, man_bits, saturate, ieee_inf) whose values are *runtime* data
@@ -97,15 +113,27 @@ def quantize_dynamic(x, fmt, *, impl: str = "auto"):
     retraces or recompiles. Bit-for-bit identical to the static entry point
     for every format with ``man_bits <= 23`` on f32 carriers (``<= 52`` on
     f64) — see tests/test_quantize_dynamic.py. Non-float inputs pass
-    through; the result dtype equals the input dtype."""
+    through; the result dtype equals the input dtype.
+
+    **Fault channel** (``repro.guardrails.faults``): the high bits of the
+    row's fourth field carry an optional bit-flip fault,
+    ``field3 = ieee_inf | (bit_index + 1) << 1``. The channel is decoded and
+    stripped here — the quantizer impls always see a clean {0, 1} flag —
+    then the chosen carrier bit is XORed into every (already quantized)
+    element. A clean row (field3 in {0, 1}) decodes to fault 0 and the XOR
+    is an exact no-op, so arming or disarming a fault is a table *value*
+    change on the same compiled executable: zero recompiles."""
     dt = jnp.dtype(x.dtype) if hasattr(x, "dtype") else None
     if dt is None or not jnp.issubdtype(dt, jnp.floating):
         return x
     fmt = jnp.asarray(fmt, jnp.int32)
+    fault = fmt[3] >> 1
+    fmt = fmt.at[3].set(fmt[3] & 1)
 
     # carrier selection mirrors the static path: f64 stays f64, rest via f32
     if dt == jnp.dtype(jnp.float64):
-        return _ref.quantize_ref_dynamic(x, fmt[0], fmt[1], fmt[2], fmt[3])
+        y = _ref.quantize_ref_dynamic(x, fmt[0], fmt[1], fmt[2], fmt[3])
+        return _bitflip(y, fault)
 
     xf = x.astype(jnp.float32)
     if impl == "auto":
@@ -117,7 +145,7 @@ def quantize_dynamic(x, fmt, *, impl: str = "auto"):
         y = _pallas_any_shape_dynamic(xf, fmt, interpret=(impl == "interpret"))
     else:
         raise ValueError(f"unknown impl {impl!r}")
-    return y.astype(dt)
+    return _bitflip(y, fault).astype(dt)
 
 
 def _to_rows(xf):

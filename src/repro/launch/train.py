@@ -15,12 +15,17 @@ config.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.artifacts import ArtifactRef, Registry, default_root
+from repro.guardrails import (
+    EscalationLadder, FaultPlan, FaultSpec, GuardrailLog,
+    NumericalFaultError, StepMonitor,
+)
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import get_config
 from repro.core import TruncationPolicy
@@ -39,6 +44,16 @@ from repro.optim.adamw import AdamWConfig, warmup_cosine
 from repro.train.trainer import (
     TrainConfig, make_hotswap_train_step, make_train_step, init_opt_state,
 )
+
+
+def _parse_fault(spec: str) -> FaultSpec:
+    """``--inject-fault SITE:STEP[:KIND]`` (KIND: overflow | bitflip)."""
+    parts = spec.split(":")
+    if len(parts) not in (2, 3):
+        raise SystemExit(
+            f"bad --inject-fault {spec!r}; want SITE:STEP[:KIND]")
+    kind = parts[2] if len(parts) == 3 else "overflow"
+    return FaultSpec(site=int(parts[0]), step=int(parts[1]), kind=kind)
 
 
 def main():
@@ -60,6 +75,15 @@ def main():
                     metavar="STEP:REF",
                     help="hot-swap to registry artifact REF at STEP "
                          "(repeatable; requires --policy-artifact)")
+    ap.add_argument("--guardrails", action="store_true",
+                    help="runtime numerical guardrails: per-step divergence "
+                         "monitor + precision-escalation ladder + "
+                         "checkpoint rollback (requires --policy-artifact)")
+    ap.add_argument("--inject-fault", action="append", default=[],
+                    metavar="SITE:STEP[:KIND]",
+                    help="chaos demo: corrupt table row SITE at STEP "
+                         "(KIND: overflow | bitflip; repeatable; requires "
+                         "--guardrails)")
     ap.add_argument("--registry", default=None,
                     help=f"artifact registry root (default $RAPTOR_REGISTRY "
                          f"or {default_root()!r})")
@@ -96,6 +120,11 @@ def main():
     if args.swap_artifact and not args.policy_artifact:
         raise SystemExit("--swap-artifact requires --policy-artifact "
                          "(the runtime-table training path)")
+    if args.guardrails and not args.policy_artifact:
+        raise SystemExit("--guardrails requires --policy-artifact (the "
+                         "escalation ladder rewrites the runtime table)")
+    if args.inject_fault and not args.guardrails:
+        raise SystemExit("--inject-fault requires --guardrails")
     registry = Registry(args.registry) if args.policy_artifact else None
     artifact = artifact_ref = None
     swap_schedule = {}
@@ -150,8 +179,28 @@ def main():
             step_fn = jax.jit(make_train_step(model, tc))
             sites = active = None
 
+        # ---- runtime numerical guardrails ---------------------------------
+        # Monitor every step's loss/finiteness; on alarm, escalate blamed
+        # sites in the live table (zero recompiles) and roll back through the
+        # existing run_supervised machinery (NumericalFaultError is a
+        # RuntimeError, the supervisor's default retry class).
+        guard = None
+        if args.guardrails:
+            glog = GuardrailLog()
+            guard = {
+                "monitor": StepMonitor(),
+                "ladder": EscalationLadder(active["table"], site_index=sites,
+                                           log=glog),
+                "plan": FaultPlan([_parse_fault(s)
+                                   for s in args.inject_fault]),
+                "log": glog,
+                "escalated": None,
+            }
+
         def restore_fn() -> int:
             latest = ck.latest_step()
+            if guard is not None:
+                guard["monitor"].reset()
             if latest is None:
                 return 0
             (state["params"], state["opt"]), manifest = ck.restore(
@@ -172,6 +221,10 @@ def main():
                 active["table"] = sites.table_for(art.policy)
                 print(f"[supervisor] resumed policy {active['ref'].ref}",
                       flush=True)
+            if guard is not None and guard["escalated"] is not None:
+                # the ladder's widened rows survive the rollback — resuming
+                # under the pre-escalation table would just diverge again
+                active["table"] = guard["escalated"]
             print(f"[supervisor] restored step {latest}", flush=True)
             return latest
 
@@ -189,16 +242,38 @@ def main():
                 active["table"] = sites.table_for(art.policy)
                 print(f"[policy] step {step}: hot-swapped to {ref.ref} "
                       "(runtime table, zero recompile)", flush=True)
+            if guard is not None:
+                table, fired = guard["plan"].apply(active["table"], step)
+                for f in fired:
+                    guard["log"].record(
+                        step, "fault_injected", site=f.site, fault=f.kind,
+                        row=[int(x) for x in table[f.site]])
+                    print(f"[guardrail] step {step}: injected {f.kind} "
+                          f"fault at site {f.site}", flush=True)
+                active["table"] = table
             batch = (peeked.pop() if peeked
                      else {k: jnp.asarray(v) for k, v in pf.next().items()})
             extra = (active["table"],) if active is not None else ()
             state["params"], state["opt"], m = step_fn(
                 state["params"], state["opt"], batch, jnp.int32(step), *extra)
+            loss = float(m["loss"])
+            if guard is not None:
+                v = guard["monitor"].update(
+                    step, loss, nonfinite=bool(m.get("nonfinite", False)))
+                if v.alarm:
+                    print(f"[guardrail] step {step}: ALARM — {v.reason}",
+                          flush=True)
+                    table, rollback = guard["ladder"].escalate(
+                        active["table"], step, v)
+                    active["table"] = guard["escalated"] = table
+                    if rollback:
+                        guard["log"].record(step, "rollback", reason=v.reason)
+                        raise NumericalFaultError(v.reason)
             if step % 10 == 0:
-                print(f"step {step:6d} loss {float(m['loss']):.4f} "
+                print(f"step {step:6d} loss {loss:.4f} "
                       f"gnorm {float(m['grad_norm']):.3f} "
                       f"({(time.time()-t0):.0f}s)", flush=True)
-            return float(m["loss"])
+            return loss
 
         try:
             final, restarts, straggles = run_supervised(
@@ -208,6 +283,22 @@ def main():
             ck.wait()
             print(f"done: step={final} restarts={restarts} "
                   f"straggles={straggles}", flush=True)
+            if guard is not None:
+                glog = guard["log"]
+                log_path = os.path.join(args.ckpt, "guardrail_log.json")
+                glog.save(log_path)
+                print(glog.summary(), flush=True)
+                print(f"[guardrail] log saved to {log_path}", flush=True)
+                if artifact is not None and len(glog):
+                    # the audited artifact: the deployed policy plus what the
+                    # controller did while it ran
+                    audited = glog.attach(artifact)
+                    art_path = os.path.join(args.ckpt,
+                                            "guardrail_artifact.json")
+                    with open(art_path, "w") as f:
+                        f.write(audited.dumps() + "\n")
+                    print(f"[guardrail] audited artifact saved to "
+                          f"{art_path}", flush=True)
         finally:
             pf.close()
 

@@ -2,9 +2,11 @@
 # step loops, divergence-onset detection, per-scope blame ranking, and the
 # error-guided warm start feeding repro.search.autosearch.
 from repro.profile.trajectory import (
-    TrajectoryReport, ScopeBlame, ladder_hints, scope_of_location,
+    TrajectoryReport, ScopeBlame, fit_log2_trend, ladder_hints,
+    scope_of_location,
 )
 
 __all__ = [
-    "TrajectoryReport", "ScopeBlame", "ladder_hints", "scope_of_location",
+    "TrajectoryReport", "ScopeBlame", "fit_log2_trend", "ladder_hints",
+    "scope_of_location",
 ]

@@ -56,6 +56,27 @@ def scope_of_location(desc: str) -> str:
     return normalize_stack(head)
 
 
+def fit_log2_trend(steps, values):
+    """Least-squares fit of ``log2(values)`` against ``steps`` over finite
+    positive samples: ``(slope, level)`` where ``level`` is the fitted
+    log2 value at the *last* sample. The :meth:`TrajectoryReport.growth_slopes`
+    fit, exposed as a module function so the online guardrail filter
+    (``repro.guardrails.TrendFilter``) extrapolates exactly the signal the
+    offline blame ranking sorts by. ``(0.0, -inf)`` when under-sampled."""
+    steps = np.asarray(steps, np.float64)
+    values = np.asarray(values, np.float64)
+    ok = np.isfinite(steps) & np.isfinite(values) & (values > 0)
+    if ok.sum() < 2:
+        last = float(np.log2(values[ok][-1])) if ok.any() else float("-inf")
+        return 0.0, last
+    t, y = steps[ok], np.log2(values[ok])
+    t0 = t - t.mean()
+    denom = float(np.sum(t0 * t0))
+    slope = float(np.sum(t0 * (y - y.mean())) / denom) if denom > 0 else 0.0
+    level = float(y.mean() + slope * (t[-1] - t.mean()))
+    return slope, level
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TrajectoryReport:
@@ -201,15 +222,7 @@ class TrajectoryReport:
         rows = np.arange(m.shape[0], dtype=np.float64)
         out = np.zeros(m.shape[1])
         for i in range(m.shape[1]):
-            ok = np.isfinite(m[:, i]) & (m[:, i] > 0)
-            if ok.sum() < 2:
-                continue
-            t = rows[ok]
-            y = np.log2(m[ok, i])
-            t0 = t - t.mean()
-            denom = float(np.sum(t0 * t0))
-            if denom > 0:
-                out[i] = float(np.sum(t0 * (y - y.mean())) / denom)
+            out[i] = fit_log2_trend(rows, m[:, i])[0]
         return out
 
     def blame(self, threshold: float,

@@ -26,6 +26,8 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "ok"              # "ok" | "error_nonfinite"
+    error: str = ""
 
 
 class Engine:
@@ -116,7 +118,25 @@ class Engine:
                       else req.prompt[-1])
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tok))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        logits_np = np.asarray(logits)
+        nxt = np.argmax(logits_np, axis=-1)
+        # quarantine non-finite decode: a slot whose logits went NaN/Inf
+        # (numerically broken policy, corrupted params) fails THAT request
+        # with a clear status and frees the slot — an argmax over NaN logits
+        # would otherwise silently emit token 0 and poison the stream
+        finite = np.isfinite(logits_np).all(axis=-1)
+        for s in live:
+            req = self.slots[s]
+            if not finite[s]:
+                req.done = True
+                req.status = "error_nonfinite"
+                req.error = (f"non-finite logits while decoding token "
+                             f"{len(req.out_tokens) + 1} (slot {s}); "
+                             "request quarantined")
+                self._done[req.rid] = req
+                self.slots[s] = None
+                self.lengths[s] = 0
+        live = [s for s in live if self.slots[s] is not None]
         for s in live:
             req = self.slots[s]
             req.out_tokens.append(int(nxt[s]))

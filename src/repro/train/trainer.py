@@ -101,7 +101,14 @@ def _build_train_step(tc: TrainConfig, grad_fn, grad_shardings):
         params, inner, om = adamw.apply_updates(
             params, grads, inner, tc.optimizer, lr)
         new_state = dict(opt_state, **inner)
-        metrics = {"loss": loss, "lr": lr, **om}
+        # in-graph health flag for the guardrail monitor: the grad norm
+        # already reduces every gradient leaf, so loss+gnorm finiteness
+        # covers the whole backward pass at no extra cost
+        healthy = jnp.isfinite(loss)
+        if "grad_norm" in om:
+            healthy = healthy & jnp.isfinite(om["grad_norm"])
+        metrics = {"loss": loss, "lr": lr,
+                   "nonfinite": jnp.logical_not(healthy), **om}
         return params, new_state, metrics
 
     return train_step

@@ -124,6 +124,28 @@ def test_straggler_monitor():
     assert not m.record(1.1)
 
 
+def test_straggler_monitor_rolling_window_eviction():
+    """The window evicts oldest samples, so the median tracks the *current*
+    regime: after a durable slowdown, old fast samples must age out and the
+    new normal must stop alarming."""
+    m = StragglerMonitor(straggle_factor=2.0, window=10)
+    for _ in range(10):
+        m.record(1.0)
+    assert len(m._times) == 10
+    # regime change: every step is now 3s. The first ones straggle vs the
+    # old 1s median...
+    assert m.record(3.0)
+    # ...but once the window is full of 3s samples, the median has moved
+    # and 3s is the new normal
+    for _ in range(10):
+        m.record(3.0)
+    assert len(m._times) == 10          # bounded: evicted, not accumulated
+    assert all(t == 3.0 for t in m._times)
+    assert not m.record(3.0)
+    # and the monitor still alarms relative to the NEW baseline
+    assert m.record(7.0)
+
+
 def test_data_pipeline_resume_determinism():
     cfg = DataConfig(seq_len=16, global_batch=4, vocab=100)
     p1 = Pipeline(cfg)

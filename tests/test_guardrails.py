@@ -1,0 +1,450 @@
+"""Runtime numerical guardrails: fault injection over the live format
+table, online divergence detection, the escalation ladder, rollback
+recovery, the serving quarantine, and the registry's publish-race retry.
+
+The full fault -> alarm -> escalate -> rollback -> recover acceptance on
+bench_model and a mini-app lives in tests/test_chaos.py (@chaos tier);
+this file is the tier-1 slice: every component, plus one short guarded
+training run on a tiny model.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  (anchor the kernels<->core import cycle)
+from repro.artifacts import PolicyArtifact, Registry
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig
+from repro.core.policy import TruncationPolicy
+from repro.guardrails import (
+    EscalationLadder, FaultPlan, FaultSpec, GuardedLoop, GuardedTrainer,
+    GuardrailConfig, GuardrailLog, NumericalFaultError, StepMonitor,
+    TrendFilter, Verdict, bitflip_row, clean_row, overflow_row,
+    sites_for_scope,
+)
+from repro.guardrails.faults import OVERFLOW_ROW
+from repro.kernels.quantize_em.ops import IDENTITY_ROW, quantize_dynamic
+from repro.models import Model
+from repro.optim.adamw import AdamWConfig
+from repro.profile import fit_log2_trend
+from repro.serving.engine import Engine
+from repro.train.trainer import TrainConfig
+
+
+# ---------------------------------------------------------------------------
+# fault rows and the quantizer fault channel
+# ---------------------------------------------------------------------------
+
+def test_overflow_row_sends_o1_values_to_inf():
+    x = jnp.asarray([0.1, 0.9, 1.0, 1.5, 3.0, -2.0], jnp.float32)
+    y = np.asarray(quantize_dynamic(x, overflow_row()))
+    assert np.isposinf(y[3]) and np.isposinf(y[4]) and np.isneginf(y[5])
+    assert np.isfinite(y[:3]).all()
+
+
+def test_bitflip_row_armed_channel_flips_exponent_bit():
+    # bit 30 is the f32 top exponent bit: 1.0 -> inf-scale, 2.0 stays
+    # finite but lands 2^64 away; the carrier format itself is unchanged
+    row = bitflip_row(IDENTITY_ROW, 30)
+    assert row[0] == IDENTITY_ROW[0] and row[1] == IDENTITY_ROW[1]
+    x = jnp.asarray([1.0, -1.0], jnp.float32)
+    y = np.asarray(quantize_dynamic(x, row))
+    assert np.isposinf(y[0]) and np.isneginf(y[1])
+    # stripping the channel restores bit-exact identity passthrough
+    x2 = jnp.asarray(np.random.RandomState(0).randn(64), jnp.float32)
+    y2 = np.asarray(quantize_dynamic(x2, clean_row(row)))
+    np.testing.assert_array_equal(y2, np.asarray(x2))
+
+
+def test_clean_row_strips_fault_channel_only():
+    armed = bitflip_row(np.array([5, 10, 0, 1], np.int32), 7)
+    assert armed[3] == 1 | ((7 + 1) << 1)
+    np.testing.assert_array_equal(clean_row(armed),
+                                  np.array([5, 10, 0, 1], np.int32))
+    with pytest.raises(ValueError, match=r"\[0, 62\]"):
+        bitflip_row(IDENTITY_ROW, 63)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_fires_once_and_persists():
+    table = np.tile(np.array([8, 10, 0, 1], np.int32), (4, 1))
+    plan = FaultPlan([FaultSpec(site=1, step=5, kind="overflow"),
+                      FaultSpec(site=2, step=9, kind="bitflip", bit=30)])
+    t0, fired = plan.apply(table, 0)
+    assert fired == [] and np.array_equal(t0, table)
+    t5, fired = plan.apply(table, 5)
+    assert [f.site for f in fired] == [1]
+    assert np.array_equal(t5[1], OVERFLOW_ROW)
+    assert np.array_equal(table[1], [8, 10, 0, 1])   # input never mutated
+    # already-fired specs stay fired; the later spec triggers at >= its step
+    t10, fired = plan.apply(t5, 10)
+    assert [f.site for f in fired] == [2]
+    assert t10[2][3] == 1 | ((30 + 1) << 1)
+    _, fired = plan.apply(t10, 11)
+    assert fired == [] and plan.pending() == []
+    plan.reset()
+    assert len(plan.pending()) == 2
+
+
+def test_fault_plan_out_of_range_site_raises():
+    plan = FaultPlan([FaultSpec(site=7, step=0)])
+    with pytest.raises(IndexError, match="site 7"):
+        plan.apply(np.tile(IDENTITY_ROW, (3, 1)), 0)
+
+
+def test_swap_row_fault_accepts_format_spec():
+    plan = FaultPlan([FaultSpec(site=0, step=0, kind="swap_row", row="e2m1")])
+    t, fired = plan.apply(np.tile(IDENTITY_ROW, (1, 1)), 0)
+    assert len(fired) == 1
+    assert t[0][0] == 2 and t[0][1] == 1
+
+
+# ---------------------------------------------------------------------------
+# monitor + trend filter
+# ---------------------------------------------------------------------------
+
+def test_step_monitor_nonfinite_alarms_immediately():
+    m = StepMonitor()
+    v = m.update(0, float("nan"))
+    assert v.alarm and v.nonfinite
+    v = m.update(1, 1.0, nonfinite=True)   # in-graph flag, finite loss
+    assert v.alarm and v.nonfinite
+
+
+def test_step_monitor_spike_and_z_after_warmup():
+    m = StepMonitor(warmup=4, z_threshold=6.0, spike_factor=10.0)
+    for s in range(4):
+        assert m.update(s, 1.0 + 0.01 * s).ok    # warmup: never alarms
+    v = m.update(4, 50.0)                        # > 10x median
+    assert v.alarm and not v.nonfinite and "spike" in v.reason
+    # the alarmed sample was NOT admitted: baseline still ~1.0
+    assert m.update(5, 1.02).ok
+    m.reset()
+    assert m.update(6, 50.0).ok                  # fresh window: re-warming
+
+
+def test_trend_filter_predicts_budget_crossing():
+    f = TrendFilter(window=8)
+    assert f.predicted_crossing(1e-2) is None    # under-sampled
+    for s in range(6):
+        f.update(s * 10, 1e-6 * 2 ** (0.1 * s * 10))  # 0.1 bits/step
+    assert f.slope() == pytest.approx(0.1, rel=1e-6)
+    # from 2^-20ish up to log2(1e-2) ~ -6.6 at 0.1 bits/step
+    eta = f.predicted_crossing(1e-2)
+    exact = (np.log2(1e-2) - np.log2(1e-6 * 2 ** 5.0)) / 0.1
+    assert eta == int(np.ceil(exact))
+    assert f.predicted_crossing(1e-9) == 0       # already above
+    f.reset()
+    assert f.predicted_crossing(1e-2) is None
+
+
+def test_fit_log2_trend_slope_and_level():
+    steps = np.arange(5) * 2.0
+    slope, level = fit_log2_trend(steps, 1e-3 * 2 ** (0.25 * steps))
+    assert slope == pytest.approx(0.25)
+    assert level == pytest.approx(np.log2(1e-3) + 0.25 * 8.0)
+    slope, level = fit_log2_trend([0.0], [0.5])
+    assert slope == 0.0 and level == pytest.approx(-1.0)
+    slope, level = fit_log2_trend([], [])
+    assert slope == 0.0 and level == float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# GuardrailLog
+# ---------------------------------------------------------------------------
+
+def test_guardrail_log_round_trip_and_attach(tmp_path):
+    log = GuardrailLog()
+    log.record(3, "fault_injected", site=1, fault="overflow")
+    log.record(7, "alarm", reason="spike")
+    log.record(7, "escalate_sites", sites=[1], rollback=True)
+    log.record(7, "rollback", reason="spike")
+    with pytest.raises(ValueError, match="unknown intervention"):
+        log.record(8, "made_coffee")
+    assert log.kinds() == {"fault_injected": 1, "alarm": 1,
+                           "escalate_sites": 1, "rollback": 1}
+    path = str(tmp_path / "glog.json")
+    log.save(path)
+    back = GuardrailLog.load(path)
+    assert back.to_json() == log.to_json()
+    assert [iv.step for iv in back.by_kind("rollback")] == [7]
+
+    art = PolicyArtifact(name="t",
+                         policy=TruncationPolicy.everywhere("e5m7"))
+    audited = log.attach(art)
+    assert GuardrailLog.from_artifact(audited).to_json() == log.to_json()
+    assert GuardrailLog.from_artifact(art) is None
+    # the attach survives the artifact's own JSON round trip
+    again = PolicyArtifact.loads(audited.dumps())
+    assert GuardrailLog.from_artifact(again).to_json() == log.to_json()
+    assert "rollback=1" in log.summary()
+
+
+# ---------------------------------------------------------------------------
+# EscalationLadder
+# ---------------------------------------------------------------------------
+
+class _FakeSite:
+    def __init__(self, index, scope):
+        self.index, self.scope = index, scope
+
+
+class _FakeIndex:
+    def __init__(self, scopes):
+        self.sites = [_FakeSite(i, s) for i, s in enumerate(scopes)]
+
+
+def test_ladder_corrupted_rows_are_prime_suspects():
+    base = np.tile(np.array([8, 10, 0, 1], np.int32), (4, 1))
+    ladder = EscalationLadder(base)
+    tab = base.copy()
+    tab[2] = OVERFLOW_ROW
+    assert ladder.suspects(tab) == [2]
+
+
+def test_ladder_blamed_scopes_then_narrowest_fallback():
+    base = np.array([[8, 10, 0, 1], [8, 2, 0, 1], [8, 10, 0, 1]], np.int32)
+    idx = _FakeIndex(["layer0/mlp", "layer1/attn", "layer0/mlp"])
+    ladder = EscalationLadder(base, site_index=idx,
+                              cfg=GuardrailConfig(top_k=2))
+    ladder.suspect_scopes = ["layer0/mlp"]
+    assert ladder.suspects(base) == [0, 2]       # blamed scope wins
+    ladder.suspect_scopes = []
+    assert ladder.suspects(base)[0] == 1         # narrowest (m=2) first
+
+
+def test_ladder_climbs_to_fp32_degrade():
+    base = np.tile(np.array([8, 2, 0, 1], np.int32), (3, 1))
+    log = GuardrailLog()
+    ladder = EscalationLadder(base, log=log, cfg=GuardrailConfig(top_k=4))
+    t1, rb = ladder.escalate(base, 10, Verdict(False, "spike", z=8.0))
+    assert not rb and ladder.level == 1          # rung 1: in-place widen
+    assert all(np.array_equal(r, IDENTITY_ROW) for r in t1)
+    # every row is identity now -> no suspects -> final rung
+    t2, rb = ladder.escalate(t1, 20, Verdict(False, "spike again"))
+    assert rb and ladder.level == 3
+    assert np.array_equal(t2, np.tile(IDENTITY_ROW, (3, 1)))
+    kinds = log.kinds()
+    assert kinds["alarm"] == 2 and kinds["escalate_sites"] == 1
+    assert kinds["degrade_fp32"] == 1
+
+
+def test_ladder_nonfinite_alarm_goes_straight_to_rollback():
+    base = np.tile(np.array([8, 2, 0, 1], np.int32), (2, 1))
+    ladder = EscalationLadder(base)
+    _, rb = ladder.escalate(base, 5, Verdict(False, "nan", nonfinite=True))
+    assert rb and ladder.level == 2
+
+
+# ---------------------------------------------------------------------------
+# GuardedLoop on a synthetic (model-free) step
+# ---------------------------------------------------------------------------
+
+def _synthetic_step(state, step, table):
+    """Loss explodes to inf while any table row sits at OVERFLOW_ROW."""
+    tab = np.asarray(table, np.int32)
+    bad = any(np.array_equal(r, OVERFLOW_ROW) for r in tab)
+    loss = float("inf") if bad else 1.0 / (1.0 + state["x"])
+    return {"x": state["x"] + 1.0}, loss, not np.isfinite(loss)
+
+
+def test_guarded_loop_detects_escalates_and_recovers(tmp_path):
+    base = np.tile(np.array([8, 10, 0, 1], np.int32), (3, 1))
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    loop = GuardedLoop(
+        _synthetic_step, {"x": np.float64(0.0)}, base,
+        checkpointer=ck, cfg=GuardrailConfig(save_every=4),
+        fault_plan=FaultPlan([FaultSpec(site=1, step=10, kind="overflow")]))
+    res = loop.run(20)
+    assert res.final_step == 20
+    assert np.isfinite(res.final_loss)
+    assert res.rollbacks == 1
+    # the faulted row was widened; untouched rows keep the baseline format
+    assert np.array_equal(res.table[1], IDENTITY_ROW)
+    assert np.array_equal(res.table[0], base[0])
+    kinds = res.log.kinds()
+    assert kinds == {"fault_injected": 1, "alarm": 1,
+                     "escalate_sites": 1, "rollback": 1}
+    # rollback restored the durable step-8 checkpoint, not step 0
+    assert res.log.by_kind("rollback")[0].step == 10
+
+
+def test_guarded_loop_without_checkpointer_restarts_from_init():
+    base = np.tile(np.array([8, 10, 0, 1], np.int32), (2, 1))
+    loop = GuardedLoop(
+        _synthetic_step, {"x": np.float64(0.0)}, base,
+        fault_plan=FaultPlan([FaultSpec(site=0, step=3, kind="overflow")]))
+    res = loop.run(8)
+    assert res.final_step == 8 and res.rollbacks == 1
+    assert np.isfinite(res.final_loss)
+
+
+def test_guarded_loop_exhausts_rollbacks_and_raises():
+    # a step that is ALWAYS non-finite: every retry alarms again until the
+    # supervisor's restart budget (max_rollbacks + 1) is spent
+    def bad_step(state, step, table):
+        return state, float("nan"), True
+    loop = GuardedLoop(bad_step, {}, np.tile(IDENTITY_ROW, (2, 1)),
+                       cfg=GuardrailConfig(max_rollbacks=2))
+    with pytest.raises(NumericalFaultError):
+        loop.run(5)
+    assert loop.rollbacks >= 3
+
+
+# ---------------------------------------------------------------------------
+# GuardedTrainer (tier-1 slice on a tiny model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                     n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+                     dtype="float32", remat=False, scan_layers=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    r = np.random.RandomState(0)
+    toks = r.randint(0, cfg.vocab, (4, 17))
+    batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+             "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+    return model, params, batch
+
+
+def test_guarded_trainer_bitflip_fault_recovers(tiny, tmp_path):
+    model, params, batch = tiny
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-2),
+                     policy=TruncationPolicy.scoped("**/mlp", "e8m10"))
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    gt = GuardedTrainer(
+        model, tc, tc.policy, params, lambda step: batch,
+        checkpointer=ck, cfg=GuardrailConfig(save_every=5),
+        fault_plan=FaultPlan([FaultSpec(site=0, step=8, kind="bitflip")]))
+    res = gt.run(16)
+    assert res.final_step == 16
+    assert np.isfinite(res.final_loss)
+    assert res.rollbacks >= 1
+    assert gt.cache_size() == 1          # escalation was table-only
+    kinds = res.log.kinds()
+    assert kinds["fault_injected"] == 1 and kinds["rollback"] >= 1
+    assert np.array_equal(gt.table[0], IDENTITY_ROW)
+
+
+def test_guarded_trainer_fault_free_run_logs_nothing(tiny, tmp_path):
+    model, params, batch = tiny
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-2),
+                     policy=TruncationPolicy.scoped("**/mlp", "e8m10"))
+    gt = GuardedTrainer(model, tc, tc.policy, params, lambda step: batch,
+                        cfg=GuardrailConfig(save_every=5))
+    res = gt.run(10)
+    assert res.rollbacks == 0 and len(res.log) == 0
+    assert np.isfinite(res.final_loss)
+    assert gt.cache_size() == 1
+
+
+# ---------------------------------------------------------------------------
+# serving quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_lm():
+    cfg = ArchConfig(name="g", family="dense", n_layers=2, d_model=48,
+                     n_heads=4, n_kv_heads=2, head_dim=12, d_ff=96, vocab=64,
+                     dtype="float32", remat=False, scan_layers=False)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_engine_quarantines_nonfinite_decode(serve_lm):
+    cfg, model, params = serve_lm
+    poisoned = jax.tree_util.tree_map(lambda p: p * jnp.nan, params)
+    eng = Engine(model, poisoned, batch_size=2, max_seq_len=16)
+    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=4)
+    eng.submit(1, np.array([4, 5, 6]), max_new_tokens=4)
+    done = eng.run()
+    assert set(done) == {0, 1}
+    for rid in (0, 1):
+        req = done[rid]
+        assert req.done and req.status == "error_nonfinite"
+        assert "non-finite logits" in req.error
+        assert req.out_tokens == []      # no garbage argmax tokens emitted
+    assert all(s is None for s in eng.slots)     # slots were freed
+    assert (eng.lengths == 0).all()
+
+
+def test_engine_healthy_requests_keep_ok_status(serve_lm):
+    cfg, model, params = serve_lm
+    eng = Engine(model, params, batch_size=2, max_seq_len=16)
+    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=3)
+    done = eng.run()
+    assert done[0].status == "ok" and done[0].error == ""
+    assert len(done[0].out_tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# registry publish-race retry
+# ---------------------------------------------------------------------------
+
+def _art(name="racy"):
+    return PolicyArtifact(name=name,
+                          policy=TruncationPolicy.everywhere("e5m7"))
+
+
+def test_registry_load_retries_through_publish_window(tmp_path):
+    reg = Registry(str(tmp_path), retries=20, backoff=0.02)
+    reg.save(_art())
+    # simulate the torn window: LATEST already names v2 but the version dir
+    # has not landed yet (reader sees the half-renamed state)
+    with open(os.path.join(str(tmp_path), "racy", "LATEST"), "w") as f:
+        f.write("v0002")
+
+    def publish_late():
+        time.sleep(0.1)
+        Registry(str(tmp_path)).save(_art())
+
+    t = threading.Thread(target=publish_late)
+    t.start()
+    try:
+        art = reg.load("racy@v2")        # pinned at the in-flight version
+    finally:
+        t.join()
+    assert art.name == "racy"
+    assert reg.latest_version("racy") == 2
+
+
+def test_registry_retry_is_bounded(tmp_path):
+    reg = Registry(str(tmp_path), retries=2, backoff=0.01)
+    reg.save(_art())
+    with open(os.path.join(str(tmp_path), "racy", "LATEST"), "w") as f:
+        f.write("v0009")                 # torn forever: nobody publishes
+    t0 = time.monotonic()
+    with pytest.raises(FileNotFoundError, match="racy@v9"):
+        reg.load("racy@v9")
+    assert time.monotonic() - t0 < 5.0
+    # bare-name load self-heals to the newest durable version, no retry
+    assert reg.load("racy").name == "racy"
+
+
+def test_registry_missing_artifact_fails_fast(tmp_path):
+    # retries huge + backoff huge: if a plain miss retried, this would hang
+    reg = Registry(str(tmp_path), retries=100, backoff=30.0)
+    t0 = time.monotonic()
+    with pytest.raises(FileNotFoundError, match="no artifact named"):
+        reg.load("never_published")
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_registry_sites_for_scope_helper():
+    idx = _FakeIndex(["layer0/mlp", "layer0/mlp/sub", "layer1/mlp",
+                      "layer0/mlpx"])
+    assert sites_for_scope(idx, "layer0/mlp") == [0, 1]
+    assert sites_for_scope(idx, "layer1") == [2]
+    assert sites_for_scope(idx, "nope") == []

@@ -1,0 +1,69 @@
+"""The CI policy-drift gate's --check failure modes: a missing or
+schema-newer committed artifact must fail in milliseconds with the exact
+refresh command — never a raw traceback, and never after minutes of
+autosearch."""
+import json
+
+import pytest
+
+from benchmarks import policy_drift
+from repro.artifacts import PolicyArtifact, save_artifact_file
+from repro.artifacts.artifact import SCHEMA_VERSION, ScopeRow
+from repro.core.policy import TruncationPolicy
+
+
+@pytest.fixture(autouse=True)
+def _no_autosearch(monkeypatch):
+    """The gate must validate the committed artifact BEFORE searching;
+    any fresh_artifact call in these tests is a bug."""
+    def boom():
+        raise AssertionError(
+            "fresh_artifact ran before the committed artifact was "
+            "validated — --check must fail fast")
+    monkeypatch.setattr(policy_drift, "fresh_artifact", boom)
+
+
+def test_check_missing_artifact_names_refresh_command(tmp_path, capsys):
+    rc = policy_drift.main(["--committed", str(tmp_path / "nope.json")])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "no committed artifact" in err
+    assert "python -m benchmarks.policy_drift --refresh" in err
+
+
+def test_check_schema_newer_artifact_is_actionable(tmp_path, capsys):
+    art = PolicyArtifact(name="bench_model",
+                         policy=TruncationPolicy.everywhere("e5m7"))
+    path = tmp_path / "bench_model.json"
+    data = art.to_json()
+    data["schema_version"] = SCHEMA_VERSION + 1
+    path.write_text(json.dumps(data))
+    rc = policy_drift.main(["--committed", str(path)])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "not readable by this build" in err
+    assert "schema version" in err
+    assert "python -m benchmarks.policy_drift --refresh" in err
+
+
+def _artifact(man_bits):
+    return PolicyArtifact(
+        name="bench_model",
+        policy=TruncationPolicy.everywhere("e5m7"),
+        assignments={"layer0/mlp": ScopeRow(man_bits=man_bits,
+                                            error_at_accept=1e-4)})
+
+
+def test_check_diffs_fresh_against_committed(tmp_path, monkeypatch, capsys):
+    path = str(tmp_path / "bench_model.json")
+    save_artifact_file(_artifact(7), path)
+    monkeypatch.setattr(policy_drift, "fresh_artifact",
+                        lambda: _artifact(7))
+    assert policy_drift.main(["--committed", path]) == 0
+    assert "policy-drift passed" in capsys.readouterr().out
+
+    monkeypatch.setattr(policy_drift, "fresh_artifact",
+                        lambda: _artifact(3))
+    assert policy_drift.main(["--committed", path]) == 1
+    err = capsys.readouterr().err
+    assert "policy-drift FAILED" in err and "layer0/mlp" in err
