@@ -41,13 +41,13 @@ def bench_trajectory_overhead():
     state = app.init_state()
     pol = app.uniform_policy(app.probe_format)
 
-    mem = memtrace(app.run_observables, pol, app.search_threshold)
+    mem = memtrace(app.run_observables, pol, threshold=app.search_threshold)
     t_mem, (_, rep) = timeit(mem, state, warmup=1, iters=3)
     csv_row("heat_memtrace_run", t_mem * 1e6,
             f"n_loc={len(rep.locations)};steps={app.n_steps}")
 
     traj_fn = profile_trajectory(app.run_observables, pol,
-                                 app.search_threshold,
+                                 threshold=app.search_threshold,
                                  n_steps=app.n_steps + 1)
     t_traj, (_, traj) = timeit(traj_fn, state, warmup=1, iters=3)
     csv_row("heat_trajectory_run", t_traj * 1e6,
@@ -73,7 +73,7 @@ def bench_warm_start():
     probe = TruncationPolicy(rules=tuple(
         TruncationRule(fmt=FPFormat(8, 5), scope=p) for p in r0.assignments))
     t0 = time.perf_counter()
-    out_lo, traj = profile_trajectory(model.loss, probe, thr,
+    out_lo, traj = profile_trajectory(model.loss, probe, threshold=thr,
                                       n_steps=8)(params, batch)
     joint = search.loss_degradation((model.loss(params, batch),), (out_lo,))
     hints = ladder_hints(traj, search.DEFAULT_WIDTHS, thr, 5,

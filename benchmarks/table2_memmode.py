@@ -27,7 +27,7 @@ def run():
     def evaluate(pol, label):
         tr = truncate(model.forward, pol, impl="ref")(params, batch)
         err = float(jnp.mean(jnp.abs(full - tr)))
-        _, rep = memtrace(fwd_sum, pol, 1e-3, impl="ref")(params, batch)
+        _, rep = memtrace(fwd_sum, pol, threshold=1e-3, impl="ref")(params, batch)
         flags = int(jnp.sum(rep.flags))
         frac = profile_counts(model.forward, pol)(params, batch) \
             .truncated_fraction

@@ -29,7 +29,7 @@ def run():
                      params, batch)
     t_hw, _ = timeit(jax.jit(truncate(model.forward, pol_hw)),
                      params, batch)
-    mem = jax.jit(memtrace(model.loss, pol_arb, 1e-3, impl="ref"))
+    mem = jax.jit(memtrace(model.loss, pol_arb, threshold=1e-3, impl="ref"))
     t_mem, _ = timeit(mem, params, batch)
 
     print("mode,us_per_call,overhead_x")

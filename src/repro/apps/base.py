@@ -129,7 +129,7 @@ class MiniApp:
             else self.uniform_policy(self.probe_format)
         thr = self.search_threshold if threshold is None else threshold
         steps = (self.n_steps + 1) if n_steps is None else n_steps
-        return _profile(self.run_observables, pol, thr,
+        return _profile(self.run_observables, pol, threshold=thr,
                         n_steps=steps, **kwargs)(state)
 
     def warm_hints(self, state=None, *, widths=None, threshold=None,

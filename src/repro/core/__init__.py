@@ -5,7 +5,7 @@ from repro.core.formats import (
 )
 from repro.core.policy import (
     TruncationPolicy, TruncationRule, magnitude_below, magnitude_above,
-    parse_policy, NotSerializableError,
+    parse_policy, resolve_policy, ResolvedPolicy, NotSerializableError,
 )
 from repro.core.api import (
     truncate, truncate_sweep, SweepHandle, memtrace, profile_counts,
@@ -29,7 +29,8 @@ __all__ = [
     "FPFormat", "parse_format", "FP64", "FP32", "TF32", "BF16", "FP16",
     "E5M2", "E4M3", "E4M3FN",
     "TruncationPolicy", "TruncationRule", "magnitude_below", "magnitude_above",
-    "parse_policy", "NotSerializableError",
+    "parse_policy", "resolve_policy", "ResolvedPolicy",
+    "NotSerializableError",
     "truncate", "truncate_sweep", "SweepHandle", "memtrace",
     "profile_counts", "profile_trajectory", "scope",
     "CountReport", "RaptorReport", "TrajectoryReport",

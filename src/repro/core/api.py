@@ -4,7 +4,8 @@
 
     policy = raptor.TruncationPolicy.scoped("model/*/mlp", "e5m7")
     lossy_step = raptor.truncate(train_step, policy)       # op-mode
-    out, report = raptor.memtrace(step, policy, 1e-3)(...) # mem-mode
+    out, report = raptor.memtrace(step, policy,
+                                  threshold=1e-3)(...)     # mem-mode
     counts = raptor.profile_counts(step, policy)(...)      # speedup inputs
 
 Op-mode and mem-mode wrappers cache the transformed, ``jax.jit``-closed
@@ -20,10 +21,33 @@ policy costs one trace, each repeat evaluation costs ~a kernel launch.
 every candidate policy — a new policy is a new table, and a whole ladder of
 policies evaluates in one ``vmap``-batched call. That is the zero-recompile
 policy-sweep path the batched precision search runs on.
+
+Canonical surface — one shape for every transform. Positional arguments are
+``(fn, policy)`` only; everything else is a keyword-only tail shared across
+the surface (``memtrace``'s historical positional ``threshold`` is accepted
+behind a deprecation shim):
+
+    transform            returns                    keyword-only tail
+    -------------------  -------------------------  ---------------------------
+    truncate             fn'                        impl, cache, mesh,
+                                                    in_shardings
+    truncate_sweep       SweepHandle factory        impl, cache, mesh,
+                                                    batch_axis, in_shardings
+    memtrace             (out, RaptorReport)        threshold, impl, cache,
+                                                    mesh, in_shardings
+    profile_trajectory   (out, TrajectoryReport)    threshold, n_steps, impl,
+                                                    cache, mesh, in_shardings
+    profile_counts       CountReport                cache, mesh, in_shardings
+
+All five trace-cache per input signature and expose ``n_traces`` /
+``cache_size()`` / ``cache_clear()``. ``mesh``/``in_shardings`` partition
+the cached executable across a device mesh (``profile_counts`` accepts them
+for surface uniformity; static counts are partition-invariant).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Callable
 
 import numpy as np
@@ -276,9 +300,23 @@ def truncate_sweep(fn: Callable, site_policy: TruncationPolicy, *,
     return wrapped
 
 
-def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
-             *, impl: str = "auto", cache: bool = True, mesh=None,
-             in_shardings=None) -> Callable:
+def _legacy_threshold_shim(name: str, legacy, threshold: float) -> float:
+    """One deprecation cycle for the historical positional ``threshold``:
+    ``memtrace(fn, policy, 1e-4)`` keeps working but warns; the canonical
+    spelling is keyword-only (``threshold=1e-4``), uniform across the
+    surface table above."""
+    if legacy is None:
+        return threshold
+    warnings.warn(
+        f"{name}(fn, policy, threshold) with a positional threshold is "
+        f"deprecated; pass threshold= as a keyword",
+        DeprecationWarning, stacklevel=3)
+    return float(legacy)
+
+
+def memtrace(fn: Callable, policy: TruncationPolicy, _threshold=None,
+             *, threshold: float = 1e-3, impl: str = "auto",
+             cache: bool = True, mesh=None, in_shardings=None) -> Callable:
     """mem-mode: returns ``(outputs, RaptorReport)`` where the report carries
     per-source-location flag counts and max relative deviations of the
     truncated values against full-precision shadow values.
@@ -291,6 +329,7 @@ def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
     For hand-rolled ``shard_map``/``pmap`` bodies, reduce per-shard reports
     with ``RaptorReport.allreduce(axis_name)`` (in-SPMD) or
     ``RaptorReport.merge_all(reports)`` (host-side)."""
+    threshold = _legacy_threshold_shim("memtrace", _threshold, threshold)
     from repro.distributed.sharding import flatten_arg_shardings
 
     def build(closed, out_tree, bargs, bkwargs):
@@ -311,8 +350,9 @@ def memtrace(fn: Callable, policy: TruncationPolicy, threshold: float = 1e-3,
 
 
 def profile_trajectory(fn: Callable, policy: TruncationPolicy,
-                       threshold: float = 1e-3, *, n_steps: int = 128,
-                       impl: str = "auto", cache: bool = True, mesh=None,
+                       _threshold=None, *, threshold: float = 1e-3,
+                       n_steps: int = 128, impl: str = "auto",
+                       cache: bool = True, mesh=None,
                        in_shardings=None) -> Callable:
     """Temporal mem-mode: returns ``(outputs, TrajectoryReport)`` where the
     report holds an ``(n_steps, n_loc)`` per-step deviation trajectory on
@@ -333,6 +373,8 @@ def profile_trajectory(fn: Callable, policy: TruncationPolicy,
     reproduce up to cross-shard summation order, the usual float-reduction
     contract. Hand-rolled ``shard_map`` bodies reduce with
     ``TrajectoryReport.allreduce``/``merge_all``."""
+    threshold = _legacy_threshold_shim("profile_trajectory", _threshold,
+                                       threshold)
     if n_steps < 1:
         raise ValueError(f"n_steps must be >= 1, got {n_steps}")
     from repro.distributed.sharding import flatten_arg_shardings
@@ -356,12 +398,38 @@ def profile_trajectory(fn: Callable, policy: TruncationPolicy,
          _mesh_key(mesh, in_shardings)), cache)
 
 
-def profile_counts(fn: Callable, policy: TruncationPolicy) -> Callable:
+def profile_counts(fn: Callable, policy: TruncationPolicy, *,
+                   cache: bool = True, mesh=None,
+                   in_shardings=None) -> Callable:
     """Static operation/byte counting (the paper's runtime counters, derived
     from the jaxpr instead): returns a CountReport of truncated vs
-    full-precision FLOPs and bytes per scope."""
-    def wrapped(*args, **kwargs):
-        closed = jax.make_jaxpr(fn)(*args, **kwargs)
-        return counters.count_jaxpr(closed.jaxpr, policy)
+    full-precision FLOPs and bytes per scope.
 
+    Trace-cached per input signature like the other transforms (counts are
+    pure functions of the jaxpr, so a cache hit skips the trace + jaxpr walk
+    entirely). ``mesh``/``in_shardings`` are accepted for surface uniformity
+    and only contribute to the cache key — static counts are
+    partition-invariant."""
+    def wrapped(*args, **kwargs):
+        leaves, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        use_cache = cache and not _has_tracer(leaves)
+        key = None
+        if use_cache:
+            key = _signature_key(
+                in_tree, leaves,
+                ("counts", policy.cache_key(), _mesh_key(mesh, in_shardings)))
+            hit = wrapped._cache.get(key)
+            if hit is not None:
+                return hit
+        wrapped.n_traces += 1
+        closed = jax.make_jaxpr(fn)(*args, **kwargs)
+        report = counters.count_jaxpr(closed.jaxpr, policy)
+        if use_cache and not _has_tracer(closed.consts):
+            wrapped._cache[key] = report
+        return report
+
+    wrapped._cache = {}
+    wrapped.n_traces = 0
+    wrapped.cache_clear = wrapped._cache.clear
+    wrapped.cache_size = lambda: len(wrapped._cache)
     return wrapped

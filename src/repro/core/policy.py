@@ -330,3 +330,70 @@ def parse_policy(spec) -> Optional["TruncationPolicy"]:
         scope, fmt = spec[len("scope:"):].split("=")
         return TruncationPolicy.scoped(scope, fmt)
     return TruncationPolicy.from_flag(spec)
+
+
+# --------------------------------------------------------------------------
+# shared policy resolution — the one profile→policy→deploy entrypoint
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedPolicy:
+    """What :func:`resolve_policy` hands every consumer: the runnable policy,
+    plus the deployed artifact (and its registry ref) when one was named —
+    serving threads the artifact through to provenance logging, the trainer
+    records its ref in checkpoint manifests."""
+
+    policy: Optional[TruncationPolicy] = None
+    artifact: Optional[object] = None      # repro.artifacts.PolicyArtifact
+    ref: Optional[object] = None           # repro.artifacts.ArtifactRef
+
+
+def _looks_like_ref(spec: str) -> bool:
+    """Registry refs (``"name"`` / ``"name@v3"``) vs flag grammar: every flag
+    spelling carries ``scope:``, ``_to_`` or ``=``; a bare identifier is a
+    registry name."""
+    return (not spec.startswith("scope:") and "_to_" not in spec
+            and "=" not in spec)
+
+
+def resolve_policy(spec=None, artifact_ref=None, *,
+                   registry=None) -> ResolvedPolicy:
+    """Resolve *anything callers deploy a policy as* into one shape.
+
+    ``spec`` accepts a :class:`TruncationPolicy`, a
+    :class:`~repro.artifacts.PolicyArtifact`, a flag string
+    (``"scope:**/mlp=e5m7"`` / ``"64_to_5_14"``), or a registry ref string
+    (``"bench_model"`` / ``"bench_model@v3"``). ``artifact_ref`` names a
+    registry artifact explicitly and is exclusive with ``spec``.
+    ``registry`` is a :class:`~repro.artifacts.Registry`, a root path, or
+    ``None`` for the default root. Used by ``launch.serve``,
+    ``launch.train``, the guardrails controller, and the serving engine —
+    the single place the flag-vs-artifact grammar lives.
+    """
+    if isinstance(spec, str) and not spec:
+        spec = None
+    if spec is not None and artifact_ref:
+        raise ValueError("--policy and --policy-artifact are exclusive")
+    if spec is None and not artifact_ref:
+        return ResolvedPolicy()
+
+    if spec is not None and not isinstance(spec, str):
+        if isinstance(spec, TruncationPolicy):
+            return ResolvedPolicy(policy=spec)
+        policy = getattr(spec, "policy", None)
+        if policy is not None:  # a PolicyArtifact (duck-typed: no import)
+            return ResolvedPolicy(policy=policy, artifact=spec)
+        raise TypeError(f"cannot resolve a policy from {type(spec).__name__}")
+
+    if isinstance(spec, str) and not _looks_like_ref(spec):
+        return ResolvedPolicy(policy=parse_policy(spec))
+
+    ref = artifact_ref or spec
+    if not ref:
+        return ResolvedPolicy()
+    from repro.artifacts import Registry  # lazy: artifacts imports us
+    if registry is None or isinstance(registry, str):
+        registry = Registry(registry)
+    artifact, aref = registry.load_ref(ref)
+    return ResolvedPolicy(policy=artifact.policy, artifact=artifact, ref=aref)

@@ -32,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import resolve_policy
 from repro.distributed.fault_tolerance import SupervisorConfig, run_supervised
 from repro.guardrails.faults import FaultPlan, sites_for_scope
 from repro.guardrails.log import GuardrailLog
@@ -275,9 +276,8 @@ class GuardedTrainer:
         from repro.train.trainer import make_hotswap_train_step, \
             init_opt_state
 
-        policy = getattr(policy_or_artifact, "policy", policy_or_artifact)
-        artifact = (policy_or_artifact
-                    if policy is not policy_or_artifact else None)
+        res = resolve_policy(policy_or_artifact)
+        policy, artifact = res.policy, res.artifact
         self.cfg = cfg or GuardrailConfig()
         example = data_fn(0)
         raw_step, self.sites = make_hotswap_train_step(
@@ -350,9 +350,8 @@ def make_guarded_app_loop(app, policy_or_artifact, *, checkpointer=None,
     -> float`` for an app-specific residual."""
     from repro.core.api import truncate_sweep
 
-    policy = getattr(policy_or_artifact, "policy", policy_or_artifact)
-    artifact = policy_or_artifact if policy is not policy_or_artifact \
-        else None
+    res = resolve_policy(policy_or_artifact)
+    policy, artifact = res.policy, res.artifact
     sweep = truncate_sweep(app.step, policy)
     state0 = app.init_state()
     handle0 = sweep(state0)

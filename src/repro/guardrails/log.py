@@ -17,7 +17,7 @@ import os
 from typing import Any, Dict, Iterator, List, Mapping, Optional
 
 KINDS = ("fault_injected", "alarm", "escalate_sites", "rollback",
-         "degrade_fp32")
+         "degrade_fp32", "drift_detected", "research_paged")
 
 
 @dataclasses.dataclass

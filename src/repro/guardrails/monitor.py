@@ -152,7 +152,7 @@ def probe_blame(fn, policy, args, threshold: float, *, n_steps: int = 4,
     rows to widen and feeds the peak into a :class:`TrendFilter`."""
     from repro.core.api import profile_trajectory
 
-    _, traj = profile_trajectory(fn, policy, threshold,
+    _, traj = profile_trajectory(fn, policy, threshold=threshold,
                                  n_steps=n_steps)(*args)
     blame = traj.blame(threshold, signal=signal)
     m = traj.rel_traj(signal)

@@ -29,9 +29,9 @@ from repro.guardrails import (
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import get_config
 from repro.core import TruncationPolicy
-# parse_policy moved to repro.core.policy (one flag grammar for every
-# entrypoint); re-exported here for backward compatibility
-from repro.core.policy import parse_policy  # noqa: F401
+# parse_policy/resolve_policy live in repro.core.policy (one grammar for
+# every entrypoint); parse_policy re-exported for backward compatibility
+from repro.core.policy import parse_policy, resolve_policy  # noqa: F401
 from repro.data.pipeline import DataConfig, Pipeline, Prefetcher
 from repro.distributed import sharding as shd
 from repro.distributed.fault_tolerance import (
@@ -114,9 +114,8 @@ def main():
     # --policy bakes a flag policy into the trace; --policy-artifact loads a
     # registry artifact and routes through runtime format tables instead, so
     # --swap-artifact can deploy a different artifact mid-run with zero
-    # recompiles (the table is a step argument, not trace state).
-    if args.policy and args.policy_artifact:
-        raise SystemExit("--policy and --policy-artifact are exclusive")
+    # recompiles (the table is a step argument, not trace state). Both flags
+    # funnel through the shared repro.core.policy.resolve_policy grammar.
     if args.swap_artifact and not args.policy_artifact:
         raise SystemExit("--swap-artifact requires --policy-artifact "
                          "(the runtime-table training path)")
@@ -126,10 +125,14 @@ def main():
     if args.inject_fault and not args.guardrails:
         raise SystemExit("--inject-fault requires --guardrails")
     registry = Registry(args.registry) if args.policy_artifact else None
-    artifact = artifact_ref = None
+    try:
+        res = resolve_policy(args.policy, args.policy_artifact,
+                             registry=registry)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    artifact, artifact_ref = res.artifact, res.ref
     swap_schedule = {}
-    if args.policy_artifact:
-        artifact, artifact_ref = registry.load_ref(args.policy_artifact)
+    if artifact_ref is not None:
         print(f"policy artifact: {artifact_ref.ref} "
               f"(digest {artifact_ref.digest[:12]})", flush=True)
         for spec in args.swap_artifact:
@@ -139,7 +142,8 @@ def main():
     tc = TrainConfig(
         optimizer=AdamWConfig(lr=args.lr),
         grad_accum=1 if args.smoke else cfg.grad_accum,
-        policy=parse_policy(args.policy),
+        # artifact policies deploy via runtime tables below, not the trace
+        policy=res.policy if artifact is None else None,
         lr_schedule=lambda s: warmup_cosine(
             s, peak_lr=args.lr, warmup=min(2000, args.steps // 10 + 1),
             total=args.steps))

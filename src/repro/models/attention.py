@@ -118,8 +118,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
 def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
                      scale: Optional[float] = None, ring: bool = False):
     """One-token attention. q: (B, Hq, Dk); caches: (B, Hkv, S, D*);
-    pos: scalar int32 — number of valid cache entries (the new token's index
-    is pos-1 after the cache update).
+    pos: int32 scalar or (B,) vector — per-slot count of valid cache entries
+    (the new token's index in slot b is pos[b]-1 after the cache update).
+    A scalar means every batch lane sits at the same cursor; the serving
+    engine passes a ragged (B,) vector so slots decode independently.
 
     ``ring=True``: the cache is a ring buffer of size S == window; slot s
     holds the token at position pos - ((pos - s) mod S) — negative means the
@@ -129,19 +131,21 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None,
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(Dk)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
     qg = q.reshape(B, Hkv, G, Dk)
     s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
-    idx = jnp.arange(S)
+    idx = jnp.arange(S)[None, None, None, :]
+    cur = pos_b[:, None, None, None]
     if ring:
-        last = pos - 1  # index of the newest token (already inserted)
+        last = cur - 1  # index of the newest token (already inserted)
         slot_pos = last - jnp.mod(last - idx, S)
-        valid = slot_pos[None, None, None, :] >= 0
+        valid = slot_pos >= 0
     else:
-        valid = idx[None, None, None, :] < pos
+        valid = idx < cur
         if window is not None:
-            valid &= idx[None, None, None, :] >= (pos - window)
+            valid &= idx >= (cur - window)
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
@@ -218,24 +222,28 @@ def gqa_forward(p, x, cfg: ArchConfig, *, positions, causal: bool = True,
 
 def gqa_decode(p, x1, cache, pos, cfg: ArchConfig, *,
                window: Optional[int] = None, positions3=None):
-    """x1: (B, 1, d); cache: dict(k=(B,Hkv,S,hd), v=...). pos: scalar count
-    of tokens already in the cache. When the cache was allocated ring-sized
-    (S == window < requested seq_len) the slot is pos mod S."""
+    """x1: (B, 1, d); cache: dict(k=(B,Hkv,S,hd), v=...). pos: scalar or
+    (B,) count of tokens already in each slot's cache (ragged decode writes
+    each lane at its own cursor). When the cache was allocated ring-sized
+    (S == window < requested seq_len) the slot is pos mod S; a non-ring
+    cursor past the cache end simply doesn't write (dead serving lanes)."""
     B = x1.shape[0]
     hd = cfg.resolved_head_dim
     S_cache = cache["k"].shape[2]
     ring = window is not None and S_cache == window
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if cfg.rope_type == "mrope" and positions3 is None:
-        positions3 = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        positions3 = jnp.broadcast_to(pos_b[None, :, None], (3, B, 1))
+    positions = pos_b[:, None]
     q, k, v = _project_qkv(
         p, x1, cfg, positions3 if cfg.rope_type == "mrope" else positions)
-    slot = jnp.mod(pos, S_cache) if ring else pos
-    k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
-                                              slot, axis=2)
-    v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
-                                              slot, axis=2)
-    o = decode_attention(q[:, :, 0], k_cache, v_cache, pos + 1,
+    slot = jnp.mod(pos_b, S_cache) if ring else pos_b
+    onehot = jnp.arange(S_cache)[None, :] == slot[:, None]   # (B, S)
+    k_cache = jnp.where(onehot[:, None, :, None],
+                        k.astype(cache["k"].dtype), cache["k"])
+    v_cache = jnp.where(onehot[:, None, :, None],
+                        v.astype(cache["v"].dtype), cache["v"])
+    o = decode_attention(q[:, :, 0], k_cache, v_cache, pos_b + 1,
                          window=None if ring else window, ring=ring)
     out = o.reshape(B, 1, -1) @ p["wo"].astype(x1.dtype)
     return out, {"k": k_cache, "v": v_cache}
@@ -323,17 +331,20 @@ def mla_forward(p, x, cfg: ArchConfig, *, positions):
 
 
 def mla_decode(p, x1, cache, pos, cfg: ArchConfig):
-    """Absorbed-form decode: cache holds only (c_kv, k_rope)."""
+    """Absorbed-form decode: cache holds only (c_kv, k_rope). pos: scalar
+    or (B,) per-slot cursor, matching ``gqa_decode``."""
     m = cfg.mla
     B = x1.shape[0]
     H = cfg.n_heads
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None]
     q_nope, q_rope = _mla_q(p, x1, cfg, positions)     # (B,H,1,dn),(B,H,1,dr)
     c_new, kr_new = _mla_latent(p, x1, cfg, positions)
-    c_cache = lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
-    r_cache = lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    onehot = jnp.arange(cache["c_kv"].shape[1])[None, :] == pos_b[:, None]
+    c_cache = jnp.where(onehot[..., None],
+                        c_new.astype(cache["c_kv"].dtype), cache["c_kv"])
+    r_cache = jnp.where(onehot[..., None],
+                        kr_new.astype(cache["k_rope"].dtype), cache["k_rope"])
 
     # kv_up columns interleave [nope | v] per head
     w_up = p["kv_up"].reshape(m.kv_lora, H, m.nope_head_dim + m.v_head_dim)
@@ -348,7 +359,7 @@ def mla_decode(p, x1, cache, pos, cfg: ArchConfig):
                        r_cache.astype(f32))
     s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
     idx = jnp.arange(c_cache.shape[1])
-    s = jnp.where(idx[None, None, :] <= pos, s, NEG_INF)
+    s = jnp.where(idx[None, None, :] <= pos_b[:, None, None], s, NEG_INF)
     pr = jax.nn.softmax(s, axis=-1)
     ctx_lat = jnp.einsum("bhs,bsl->bhl", pr, c_cache.astype(f32))
     o = jnp.einsum("bhl,lhd->bhd", ctx_lat, w_uv.astype(f32))

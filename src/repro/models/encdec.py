@@ -186,7 +186,7 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
         "layers": stack,
         "cross_k": jnp.zeros(cross_shape, dtype),
         "cross_v": jnp.zeros(cross_shape, dtype),
-        "pos": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
     }
 
 

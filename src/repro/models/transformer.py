@@ -385,14 +385,18 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int):
     long-context memory win (a 500k-token danube decode cache shrinks
     window/seq = 128x). Global-attention layers (hymba) keep full-length
     caches in a separate ``global`` list aligned with the execution
-    segments."""
+    segments.
+
+    ``pos`` is a (batch,) per-slot cursor so a continuous-batching server
+    can prefill one slot while others decode; aligned decode simply keeps
+    all lanes equal."""
     dtype = jnp.dtype(cfg.dtype)
     n_lead = _n_lead(cfg)
     n_stack = cfg.n_layers - n_lead
     win = cfg.sliding_window
     segs = segments(cfg)
     n_globals = sum(1 for k, _, _ in segs if k == "global")
-    cache = {"pos": jnp.zeros((), jnp.int32)}
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
     if n_globals:
         ring_one = init_layer_cache(cfg, batch, seq_len, dtype, window=win)
         cache["layers"] = _stack_caches(ring_one, n_stack - n_globals)

@@ -1,0 +1,6 @@
+"""Serving: continuous batching + sampled shadow profiling of live traffic."""
+from repro.serving.engine import Engine, Request
+from repro.serving.shadow import DriftEvent, ShadowConfig, ShadowProfiler
+
+__all__ = ["Engine", "Request", "ShadowConfig", "ShadowProfiler",
+           "DriftEvent"]

@@ -331,14 +331,14 @@ def test_engine_submit_validation(lm):
     cfg, model, params = lm
     eng = Engine(model, params, batch_size=2, max_seq_len=16)
     with pytest.raises(ValueError, match="max_seq_len=16"):
-        eng.submit(0, np.arange(1, 17))          # 16 tokens: can't decode
-    eng.submit(0, np.arange(1, 16))              # 15 tokens: exactly fits
+        eng.submit(np.arange(1, 17))             # 16 tokens: can't decode
+    eng.submit(np.arange(1, 16))                 # 15 tokens: exactly fits
     with pytest.raises(ValueError, match="non-empty 1-D"):
-        eng.submit(1, np.array([], np.int32))
+        eng.submit(np.array([], np.int32))
     with pytest.raises(ValueError, match="non-empty 1-D"):
-        eng.submit(1, np.array([[1, 2]]))
+        eng.submit(np.array([[1, 2]]))
     with pytest.raises(ValueError, match="max_new_tokens"):
-        eng.submit(1, np.array([1, 2]), max_new_tokens=0)
+        eng.submit(np.array([1, 2]), max_new_tokens=0)
 
 
 def test_engine_serves_artifact_bit_identical_to_policy(lm, tmp_path):
@@ -356,15 +356,15 @@ def test_engine_serves_artifact_bit_identical_to_policy(lm, tmp_path):
     for policy in (pol, art):
         eng = Engine(model, params, batch_size=2, max_seq_len=24,
                      policy=policy)
-        for rid, p in enumerate(prompts):
-            eng.submit(rid, p, max_new_tokens=5)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=5)
         done = eng.run()
         outs.append({rid: tuple(r.out_tokens) for rid, r in done.items()})
     assert outs[0] == outs[1]
     # and the policy actually changes decoding vs the untruncated engine
     eng = Engine(model, params, batch_size=2, max_seq_len=24)
-    for rid, p in enumerate(prompts):
-        eng.submit(rid, p, max_new_tokens=5)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
     assert eng._decode is not None  # smoke: plain engine still runs
     eng.run()
 
@@ -495,7 +495,7 @@ def test_acceptance_bench_model_artifact_loop(tmp_path):
                            search.loss_degradation, budget, threshold=thr)
     probe = TruncationPolicy(rules=tuple(
         TruncationRule(fmt=FPF(8, 5), scope=p) for p in r0.assignments))
-    out_lo, traj = profile_trajectory(model.loss, probe, thr,
+    out_lo, traj = profile_trajectory(model.loss, probe, threshold=thr,
                                       n_steps=8)(params, batch)
     joint = search.loss_degradation((model.loss(params, batch),), (out_lo,))
     hints = ladder_hints(traj, search.DEFAULT_WIDTHS, thr, 5,
@@ -517,8 +517,8 @@ def test_acceptance_bench_model_artifact_loop(tmp_path):
     for policy in (r0.policy(), art):
         eng = Engine(model, params, batch_size=2, max_seq_len=32,
                      policy=policy)
-        for rid, p in enumerate(prompts):
-            eng.submit(rid, p, max_new_tokens=8)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8)
         outs.append({rid: tuple(r.out_tokens)
                      for rid, r in eng.run().items()})
     assert outs[0] == outs[1]

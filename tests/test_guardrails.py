@@ -367,8 +367,8 @@ def test_engine_quarantines_nonfinite_decode(serve_lm):
     cfg, model, params = serve_lm
     poisoned = jax.tree_util.tree_map(lambda p: p * jnp.nan, params)
     eng = Engine(model, poisoned, batch_size=2, max_seq_len=16)
-    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=4)
-    eng.submit(1, np.array([4, 5, 6]), max_new_tokens=4)
+    eng.submit(np.array([1, 2, 3]), max_new_tokens=4)
+    eng.submit(np.array([4, 5, 6]), max_new_tokens=4)
     done = eng.run()
     assert set(done) == {0, 1}
     for rid in (0, 1):
@@ -383,7 +383,7 @@ def test_engine_quarantines_nonfinite_decode(serve_lm):
 def test_engine_healthy_requests_keep_ok_status(serve_lm):
     cfg, model, params = serve_lm
     eng = Engine(model, params, batch_size=2, max_seq_len=16)
-    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=3)
+    eng.submit(np.array([1, 2, 3]), max_new_tokens=3)
     done = eng.run()
     assert done[0].status == "ok" and done[0].error == ""
     assert len(done[0].out_tokens) == 3

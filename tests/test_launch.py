@@ -51,7 +51,8 @@ def test_cache_specs_shapes():
     # MLA compressed cache: (L-1 scanned, B, S, kv_lora)
     assert cache["layers"]["c_kv"].shape == (59, 128, 32768, m.kv_lora)
     assert cache["lead"][0]["c_kv"].shape == (128, 32768, m.kv_lora)
-    assert cache["pos"].shape == ()
+    # per-slot cursor: one int32 per batch lane (continuous batching)
+    assert cache["pos"].shape == (128,)
 
 
 def test_cells_skip_rule():

@@ -32,7 +32,7 @@ def test_outputs_match_opmode():
     w, x = data()
     pol = TruncationPolicy.everywhere(E5M2)
     out_op = truncate(model, pol)(w, x)
-    out_mem, _ = memtrace(model, pol, 1e-3)(w, x)
+    out_mem, _ = memtrace(model, pol, threshold=1e-3)(w, x)
     assert float(out_op) == float(out_mem)
 
 
@@ -40,21 +40,21 @@ def test_shadow_is_full_precision():
     """With an identity policy nothing is flagged."""
     w, x = data()
     pol = TruncationPolicy.everywhere("fp32")
-    out, report = memtrace(model, pol, 1e-6)(w, x)
+    out, report = memtrace(model, pol, threshold=1e-6)(w, x)
     assert float(out) == float(model(w, x))
     assert int(jnp.sum(report.flags)) == 0
 
 
 def test_flags_grow_with_coarser_format():
     w, x = data()
-    _, rep_fine = memtrace(model, TruncationPolicy.everywhere(FP16), 1e-3)(w, x)
-    _, rep_coarse = memtrace(model, TruncationPolicy.everywhere(E5M2), 1e-3)(w, x)
+    _, rep_fine = memtrace(model, TruncationPolicy.everywhere(FP16), threshold=1e-3)(w, x)
+    _, rep_coarse = memtrace(model, TruncationPolicy.everywhere(E5M2), threshold=1e-3)(w, x)
     assert int(jnp.sum(rep_coarse.flags)) > int(jnp.sum(rep_fine.flags))
 
 
 def test_heatmap_locates_scopes():
     w, x = data()
-    _, rep = memtrace(model, TruncationPolicy.everywhere(E5M2), 1e-2)(w, x)
+    _, rep = memtrace(model, TruncationPolicy.everywhere(E5M2), threshold=1e-2)(w, x)
     locs = [loc for loc, n, _ in rep.top(100) if n > 0]
     assert any("attn" in l for l in locs)
     assert any("mlp" in l for l in locs)
@@ -65,9 +65,9 @@ def test_exclusion_workflow_table2():
     w, x = data()
     pol = TruncationPolicy.everywhere(E5M2)
     ref = float(model(w, x))
-    out0, rep0 = memtrace(model, pol, 1e-2)(w, x)
+    out0, rep0 = memtrace(model, pol, threshold=1e-2)(w, x)
     worst = rep0.top(1)[0][0].split(" ")[0].split("/")[0]
-    out1, rep1 = memtrace(model, pol.excluding(worst), 1e-2)(w, x)
+    out1, rep1 = memtrace(model, pol.excluding(worst), threshold=1e-2)(w, x)
     err0 = abs(float(out0) - ref)
     err1 = abs(float(out1) - ref)
     # excluding the most-flagged scope must not make things worse
@@ -83,7 +83,7 @@ def test_memmode_through_scan():
         return jnp.sum(y) + jnp.sum(ys)
     x = jnp.asarray(np.random.RandomState(2).randn(8), jnp.float32)
     pol = TruncationPolicy.everywhere(E5M2)
-    out, rep = memtrace(f, pol, 1e-3)(x)
+    out, rep = memtrace(f, pol, threshold=1e-3)(x)
     assert np.isfinite(float(out))
     assert int(jnp.sum(rep.op_counts)) > 0
     # op counts accumulate across the 4 scan iterations
@@ -93,7 +93,7 @@ def test_memmode_through_scan():
 def test_memmode_jits():
     w, x = data()
     pol = TruncationPolicy.everywhere(E5M2)
-    fn = jax.jit(memtrace(model, pol, 1e-3))
+    fn = jax.jit(memtrace(model, pol, threshold=1e-3))
     out1, rep1 = fn(w, x)
     out2, rep2 = fn(w, x)
     assert float(out1) == float(out2)
@@ -142,7 +142,7 @@ def test_zero_crossing_input_does_not_poison_max_rel():
         return jnp.sum(d)
 
     x = jnp.asarray([2.0, 4.0], jnp.float32)
-    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), threshold=1e-3)(x)
     mr = np.asarray(jax.device_get(rep.max_rel))
     # the shadow subtraction really is a zero crossing and the low lane
     # really deviates (otherwise this regression tests nothing)
@@ -174,7 +174,7 @@ def test_while_loop_error_appearing_after_iteration_k():
         return jnp.sum(lax.while_loop(cond, body, (jnp.int32(0), x))[1])
 
     x = jnp.asarray([1.0, 2.0], jnp.float32)
-    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), threshold=1e-3)(x)
     (i,) = [j for j, l in enumerate(rep.locations) if l.startswith("w ")]
     ops = np.asarray(jax.device_get(rep.op_counts))
     flags = np.asarray(jax.device_get(rep.flags))
@@ -202,7 +202,7 @@ def test_cond_branch_stats_accumulate_across_scan_iterations():
         return jnp.sum(y)
 
     x = jnp.asarray([1.0, 2.0], jnp.float32)
-    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)(x)
+    out, rep = memtrace(f, TruncationPolicy.everywhere(E5M2), threshold=1e-3)(x)
     by = {l.split(" ")[0]: i for i, l in enumerate(rep.locations)}
     ops = np.asarray(jax.device_get(rep.op_counts))
     flags = np.asarray(jax.device_get(rep.flags))

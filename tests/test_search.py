@@ -283,7 +283,7 @@ def test_warm_start_acceptance_miniapps_and_bench_model():
     probe = TruncationPolicy(rules=tuple(
         search.driver.TruncationRule(fmt=FPFormat(8, 5), scope=p)
         for p in r0.assignments))
-    out_lo, traj = profile_trajectory(model.loss, probe, thr,
+    out_lo, traj = profile_trajectory(model.loss, probe, threshold=thr,
                                       n_steps=8)(params, batch)
     joint = search.loss_degradation((model.loss(params, batch),), (out_lo,))
     hints = ladder_hints(traj, search.DEFAULT_WIDTHS, thr, 5,

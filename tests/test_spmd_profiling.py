@@ -214,16 +214,16 @@ def test_trajectory_reduces_exactly_under_mesh():
             return h * h          # per-example output (shard_map-exact)
 
         args2 = args
-        out0, t0 = profile_trajectory(_steps, pol, 1e-3, n_steps=6)(*args2)
+        out0, t0 = profile_trajectory(_steps, pol, threshold=1e-3, n_steps=6)(*args2)
         sh = [None, None, batch_sharding(mesh, "data")]
-        out1, t1 = profile_trajectory(_steps, pol, 1e-3, n_steps=6,
+        out1, t1 = profile_trajectory(_steps, pol, threshold=1e-3, n_steps=6,
                                       mesh=mesh, in_shardings=sh)(*args2)
 
         def eqs(a, b):
             return bool(np.array_equal(jax.device_get(a), jax.device_get(b)))
 
         def body(w1, w2, xs):
-            _, t = profile_trajectory(_steps, pol, 1e-3, n_steps=6)(
+            _, t = profile_trajectory(_steps, pol, threshold=1e-3, n_steps=6)(
                 w1, w2, xs)
             return t.allreduce("data")
 

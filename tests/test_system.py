@@ -92,7 +92,7 @@ def test_memmode_flags_consistent_with_error(setup):
 
     def fwd_sum(p, b):
         return jnp.sum(model.forward(p, b))
-    out, rep = memtrace(fwd_sum, pol, 1e-3, impl="ref")(params, batch)
+    out, rep = memtrace(fwd_sum, pol, threshold=1e-3, impl="ref")(params, batch)
     assert int(jnp.sum(rep.flags)) > 0
     top = rep.top(3)
     assert top[0][1] >= top[-1][1]
@@ -125,9 +125,9 @@ def test_estimate_speedup_bounds(setup):
 def test_serving_engine(setup):
     cfg, model, params, batch = setup
     eng = Engine(model, params, batch_size=2, max_seq_len=32)
-    eng.submit(0, np.array([1, 2, 3]), max_new_tokens=4)
-    eng.submit(1, np.array([4, 5, 6]), max_new_tokens=4)
-    eng.submit(2, np.array([7, 8, 9]), max_new_tokens=2)
+    eng.submit(np.array([1, 2, 3]), max_new_tokens=4)
+    eng.submit(np.array([4, 5, 6]), max_new_tokens=4)
+    eng.submit(np.array([7, 8, 9]), max_new_tokens=2)
     done = eng.run()
     assert set(done) == {0, 1, 2}
     assert len(done[0].out_tokens) == 4

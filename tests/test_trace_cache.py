@@ -108,7 +108,7 @@ def test_grad_composition_falls_back_uncached():
 
 def test_memtrace_cached_reports_stable():
     f, w, x = _model()
-    mt = memtrace(f, TruncationPolicy.everywhere(E5M2), 1e-3)
+    mt = memtrace(f, TruncationPolicy.everywhere(E5M2), threshold=1e-3)
     out1, rep1 = mt(w, x)
     out2, rep2 = mt(w, x)
     assert mt.n_traces == 1

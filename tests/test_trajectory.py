@@ -54,7 +54,7 @@ def test_trajectory_totals_match_memtrace():
     f = _staged(0, 6)
     x = jnp.asarray([1.0, 2.0], jnp.float32)
     out_t, traj = _profile(f, x, n_steps=8)
-    out_m, rep = memtrace(f, TruncationPolicy.everywhere("e5m2"), 1e-3)(x)
+    out_m, rep = memtrace(f, TruncationPolicy.everywhere("e5m2"), threshold=1e-3)(x)
     assert float(out_t) == float(out_m)
     assert isinstance(traj, TrajectoryReport)
     assert traj.locations == rep.locations
@@ -229,7 +229,7 @@ def test_empty_location_table_sentinel():
     def f(x):
         return x * 2.0
 
-    out, traj = profile_trajectory(f, TruncationPolicy(rules=()), 1e-3,
+    out, traj = profile_trajectory(f, TruncationPolicy(rules=()), threshold=1e-3,
                                    n_steps=2)(jnp.ones((3,), jnp.float32))
     assert traj.locations == ("<no truncated locations>",)
     assert traj.scopes == ("",)
@@ -252,7 +252,7 @@ def test_allreduce_on_single_device_mesh():
 
     def body(xs):
         _, t = profile_trajectory(
-            f, TruncationPolicy.everywhere("e5m2"), 1e-3, n_steps=4)(xs)
+            f, TruncationPolicy.everywhere("e5m2"), threshold=1e-3, n_steps=4)(xs)
         return t.allreduce("data")
 
     t1 = shard_map(body, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
