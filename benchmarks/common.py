@@ -40,6 +40,26 @@ def timeit(fn, *args, warmup=1, iters=3):
     return (time.perf_counter() - t0) / iters, out
 
 
+def timeit_pair(fn_a, fn_b, *args, warmup=1, iters=8):
+    """Median times of two callables on the same args, alternating A/B each
+    iteration. For A-vs-B speedup ratios, back-to-back `timeit` calls let a
+    frequency ramp or background-load shift land entirely on one side and
+    flip the ratio; interleaving exposes both sides to the same drift, and
+    the median drops stray outliers."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
+
+
 # rows recorded by csv_row since the last reset_results(); benchmarks/run.py
 # snapshots these into machine-readable BENCH_<name>.json artifacts so the
 # perf trajectory is tracked across PRs

@@ -52,15 +52,31 @@ GATED = {
         "truncate_cached_call": "lower",
         "policy_sweep_per_candidate_table": "lower",
         "policy_sweep_per_candidate_steady": "lower",
+        # dimensionless first-call ratio: the table sweep's one trace +
+        # compile must keep beating six static traces + compiles (was 0.9x
+        # before the per-site format-row scatter was removed)
+        "policy_sweep_first_call_speedup": "higher",
         "autosearch_wall_us": "lower",
     },
     "kernels_micro": {
         "quantize_e5m7_4M": "lower",
         "flash_attn_B1H8S1024D64": "lower",
         "wkv6_B1H8S512hd64": "lower",
+        # fused quantize epilogue vs kernel + separate quantize dispatch:
+        # dimensionless, must stay >= the committed measured speedup band
+        "flash_attn_fused_speedup": "higher",
+        "wkv6_fused_speedup": "higher",
     },
     "search_sharded": {
         "sharded_sweep_dev1": "lower",
+    },
+    "perf_fp8_dot": {
+        # measured native-fp8-storage dot vs emulated-rounding dot, and the
+        # fraction of the roofline's modeled compute-term speedup that
+        # measurement delivers. Both dimensionless, so they gate
+        # cross-machine; the absolute *_us rows stay ungated.
+        "fp8_dot_native_speedup": "higher",
+        "fp8_dot_measured_vs_modeled": "higher",
     },
     "serving_throughput": {
         # the structural win: tick-count ratio of aligned-wave admission
@@ -79,7 +95,26 @@ GATED = {
         # dispatch/eval reductions are asserted inside the benchmark.
         "heat_memtrace_run": "lower",
         "heat_trajectory_run": "lower",
+        # dimensionless trajectory-vs-memtrace overhead ratio: pins the
+        # per-step accumulation cost (site-filtered buffers, folded writes)
+        # cross-machine, where the absolute walls above cannot
+        "heat_trajectory_overhead": "lower",
     },
+}
+
+# Dimensionless (benchmark, row) pairs — speedup/overhead ratios whose two
+# sides were measured on the same machine in the same process. They are
+# machine-independent by construction, so dividing them by the machine
+# factor would *introduce* a hardware dependence (a 2x-slower runner would
+# halve every committed speedup and trip the "higher" gates); they gate raw.
+RATIO_ROWS = {
+    ("search_convergence", "policy_sweep_first_call_speedup"),
+    ("kernels_micro", "flash_attn_fused_speedup"),
+    ("kernels_micro", "wkv6_fused_speedup"),
+    ("serving_throughput", "continuous_over_aligned_speedup"),
+    ("instability_profile", "heat_trajectory_overhead"),
+    ("perf_fp8_dot", "fp8_dot_native_speedup"),
+    ("perf_fp8_dot", "fp8_dot_measured_vs_modeled"),
 }
 
 # (benchmark, row) whose fresh/baseline ratio measures the MACHINE, not the
@@ -175,7 +210,8 @@ def compare(baselines: dict, fresh: dict, threshold: float,
                 continue
             is_cal = calibration is not None and (bench, row) == calibration
             limit = CAL_THRESHOLD if is_cal else threshold
-            ratio = (new / base) / (1.0 if is_cal else cal)
+            raw = is_cal or (bench, row) in RATIO_ROWS
+            ratio = (new / base) / (1.0 if raw else cal)
             if direction == "lower":
                 bad = ratio > 1.0 + limit
                 verdict = f"{ratio:.2f}x baseline (limit {1 + limit:.2f}x)"

@@ -8,6 +8,15 @@ Rows:
   * ``heat_trajectory_run``  — the same run with per-step trajectory ring
                                buffers (the tentpole's added cost; derived
                                carries the overhead ratio)
+  * ``heat_trajectory_overhead`` — that overhead as a gated dimensionless
+                               ratio (trajectory/memtrace wall). Ratios of
+                               same-machine timings gate cleanly across
+                               runners where the raw walls would not.
+  * ``heat_trajectory_blamed_run`` — the trajectory rerun restricted to the
+                               worst columns of the full profile
+                               (``profile_trajectory(sites=...)``): the
+                               focused-followup cost once blame has named
+                               its sites
   * ``bench_autosearch_unguided`` — full-ladder search on the bench model
   * ``bench_profile_trajectory``  — the one-off profiling run feeding hints
   * ``bench_autosearch_warm``     — the warm-started search; derived
@@ -55,6 +64,31 @@ def bench_trajectory_overhead():
             f";rows={traj.n_steps};n_loc={traj.n_locations}"
             f";steps_seen={int(jax.device_get(traj.steps_seen))}")
     assert int(jax.device_get(traj.steps_seen)) == app.n_steps
+    csv_row("heat_trajectory_overhead", t_traj / t_mem,
+            f"trajectory_us={t_traj * 1e6:.1f};memtrace_us={t_mem * 1e6:.1f}")
+
+    # focused follow-up: rerun with ring buffers threaded only through the
+    # worst columns of the full profile — the sites blame would name
+    peaks = traj.rel_traj().max(axis=0)
+    cols = traj.column_locations()
+    worst = sorted(range(len(cols)), key=lambda c: -peaks[c])[:4]
+    sites = [traj.totals.locations[cols[c]] for c in worst]
+    sel_fn = profile_trajectory(app.run_observables, pol,
+                                threshold=app.search_threshold,
+                                n_steps=app.n_steps + 1, sites=sites)
+    t_sel, (_, sel) = timeit(sel_fn, state, warmup=1, iters=3)
+    csv_row("heat_trajectory_blamed_run", t_sel * 1e6,
+            f"overhead_vs_memtrace={t_sel / t_mem:.2f}x"
+            f";cols={len(sel.scopes)};n_loc={sel.n_locations}")
+    assert len(sel.scopes) == len(sites)
+    # the filtered columns must be the full profile's rows, bit-for-bit
+    import numpy as np
+    full = np.asarray(traj.rel_traj())
+    filt = np.asarray(sel.rel_traj())
+    col_of = {loc: c for c, loc in enumerate(cols)}
+    for c_sel, loc in enumerate(sel.column_locations()):
+        assert np.array_equal(filt[:, c_sel], full[:, col_of[loc]]), \
+            "site-filtered trajectory diverged from the full profile"
 
 
 def bench_warm_start():

@@ -9,11 +9,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.quantize_em.ops import quantize
+from repro.kernels.quantize_em.ops import quantize, quantize_dynamic, format_row
 from repro.core.formats import FPFormat
 from repro.models.attention import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention as fa_fused
+from repro.kernels.rwkv6.ops import wkv6
 from repro.kernels.rwkv6.ref import wkv6_ref
-from benchmarks.common import timeit, csv_row
+from benchmarks.common import timeit, timeit_pair, csv_row
 
 
 def run():
@@ -46,6 +48,33 @@ def run():
     t, _ = timeit(wk, args[0], args[1], args[2], w)
     flops = B * H * S * hd * hd * 4
     csv_row("wkv6_B1H8S512hd64", t * 1e6, f"{flops / t / 1e9:.1f}GFLOP/s")
+
+    # ---- fused quantize epilogue vs kernel + separate quantize dispatch ----
+    # The interpreter routes a truncation site's format row into the
+    # producing kernel's epilogue instead of appending a standalone quantize
+    # (kernels/fused.py). Fused: one executable carrying the epilogue.
+    # Unfused: the kernel executable, then a second dispatch quantizing its
+    # output — an extra launch plus a full round-trip of the output array.
+    # The ratio is dimensionless, so it gates cross-machine (compare.py).
+    row = jnp.asarray(format_row("e4m3"), jnp.int32)
+    qz = jax.jit(lambda y, fr: quantize_dynamic(y, fr, impl="ref"))
+
+    fuse_fa = jax.jit(
+        lambda a, b, c, fr: fa_fused(a, b, c, causal=True, out_fmt=fr))
+    base_fa = jax.jit(lambda a, b, c: fa_fused(a, b, c, causal=True))
+    t_f, t_u = timeit_pair(lambda: fuse_fa(q, k, v, row),
+                           lambda: qz(base_fa(q, k, v), row))
+    csv_row("flash_attn_fused_speedup", t_u / t_f,
+            f"fused_us={t_f * 1e6:.1f};unfused_us={t_u * 1e6:.1f}")
+
+    fuse_wk = jax.jit(
+        lambda a, b, c, d, fr: wkv6(a, b, c, d, u, s0, out_fmt=fr)[0])
+    base_wk = jax.jit(lambda a, b, c, d: wkv6(a, b, c, d, u, s0)[0])
+    t_f, t_u = timeit_pair(
+        lambda: fuse_wk(args[0], args[1], args[2], w, row),
+        lambda: qz(base_wk(args[0], args[1], args[2], w), row))
+    csv_row("wkv6_fused_speedup", t_u / t_f,
+            f"fused_us={t_f * 1e6:.1f};unfused_us={t_u * 1e6:.1f}")
 
 
 def main():

@@ -77,6 +77,12 @@ def bench_policy_sweep(n_candidates: int = 6):
             f";sites={handle.num_sites}")
     csv_row("policy_sweep_per_candidate_steady", steady_per_table * 1e6,
             f"speedup={per_policy / steady_per_table:.1f}x")
+    # the first-call ratio as a gated dimensionless row: even paying its one
+    # trace + compile, the table sweep must not lose to the per-policy
+    # static path (it used to, 0.9x, when each site's format row was
+    # assembled with a scatter — ~276 scatters dominated the sweep trace)
+    csv_row("policy_sweep_first_call_speedup", per_policy / per_table,
+            f"static_us={per_policy * 1e6:.1f};table_us={per_table * 1e6:.1f}")
     assert sw.n_traces == 1, "sweep wrapper must walk the jaxpr once"
     return per_policy / per_table
 

@@ -138,7 +138,8 @@ def _cached_transform(fn: Callable, build: Callable, fallback: Callable,
 
 
 def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto",
-             cache: bool = True, mesh=None, in_shardings=None) -> Callable:
+             cache: bool = True, mesh=None, in_shardings=None,
+             native_fp8: bool = False) -> Callable:
     """Return ``fn`` with op-mode truncation applied under ``policy``.
 
     The wrapper is an ordinary traceable JAX function: compose freely with
@@ -152,23 +153,32 @@ def truncate(fn: Callable, policy: TruncationPolicy, *, impl: str = "auto",
     ``PartitionSpec`` broadcasts to every leaf, or a pytree prefix of the
     positional-args tuple; ``None`` replicates) and the truncated
     computation runs data-parallel across the mesh. The fallback path under
-    an outer trace ignores them (the enclosing jit owns the partitioning)."""
+    an outer trace ignores them (the enclosing jit owns the partitioning).
+
+    ``native_fp8``: execute ``quantize_dot_inputs`` dot sites whose rule
+    format maps onto ``float8_e4m3fn`` (e4m3, fn overflow) on native fp8
+    storage with f32 accumulation (``repro.kernels.fp8_dot``) instead of
+    emulating the rounding in the carrier dtype — same bit-exact input
+    quantize, but the contraction actually exercises the low-precision
+    unit."""
     from repro.distributed.sharding import flatten_arg_shardings
 
     def build(closed, out_tree, bargs, bkwargs):
         return interpreter.quantized_callable(
-            closed, out_tree, policy, impl,
+            closed, out_tree, policy, impl, native_fp8=native_fp8,
             flat_shardings=flatten_arg_shardings(
                 mesh, in_shardings, bargs, bkwargs))
 
     def fallback(closed, out_tree, leaves):
         outs = interpreter.eval_quantized(
-            closed.jaxpr, closed.consts, leaves, policy, impl)
+            closed.jaxpr, closed.consts, leaves, policy, impl,
+            native_fp8=native_fp8)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
     return _cached_transform(
         fn, build, fallback,
-        (policy.cache_key(), impl, _mesh_key(mesh, in_shardings)), cache)
+        (policy.cache_key(), impl, native_fp8,
+         _mesh_key(mesh, in_shardings)), cache)
 
 
 class SweepHandle:
@@ -351,7 +361,7 @@ def memtrace(fn: Callable, policy: TruncationPolicy, _threshold=None,
 
 def profile_trajectory(fn: Callable, policy: TruncationPolicy,
                        _threshold=None, *, threshold: float = 1e-3,
-                       n_steps: int = 128, impl: str = "auto",
+                       n_steps: int = 128, sites=None, impl: str = "auto",
                        cache: bool = True, mesh=None,
                        in_shardings=None) -> Callable:
     """Temporal mem-mode: returns ``(outputs, TrajectoryReport)`` where the
@@ -363,6 +373,14 @@ def profile_trajectory(fn: Callable, policy: TruncationPolicy,
     it to ``MiniApp.n_steps`` for an exact trajectory; longer runs wrap).
     Inner solver loops accumulate into their enclosing step's row, and a
     straight-line program lands entirely in row 0.
+
+    ``sites`` restricts the per-step trajectory to matching truncated sites
+    (substring patterns over site location descriptions, same matching as
+    ``TruncationPolicy`` rules): only matching sites get a trajectory
+    column, which cuts the ring-buffer memory and per-step bookkeeping for
+    wide tables to the handful of blamed sites under study. Whole-run
+    totals still cover every truncated site; ``TrajectoryReport.columns``
+    records the column -> location mapping. ``None`` keeps every site.
 
     Trace-cached and meshable exactly like ``memtrace``: with
     ``mesh``/``in_shardings`` the trajectory's sums/maxes are reduced by
@@ -382,19 +400,20 @@ def profile_trajectory(fn: Callable, policy: TruncationPolicy,
     def build(closed, out_tree, bargs, bkwargs):
         return memmode.shadowed_callable(
             closed, out_tree, policy, threshold, impl,
-            traj_len=n_steps,
+            traj_len=n_steps, traj_sites=sites,
             flat_shardings=flatten_arg_shardings(
                 mesh, in_shardings, bargs, bkwargs))
 
     def fallback(closed, out_tree, leaves):
         outs, report = memmode.eval_shadowed(
             closed.jaxpr, closed.consts, leaves, policy, threshold, impl,
-            traj_len=n_steps)
+            traj_len=n_steps, traj_sites=sites)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
     return _cached_transform(
         fn, build, fallback,
         ("trajectory", policy.cache_key(), threshold, impl, n_steps,
+         tuple(sites) if sites is not None else None,
          _mesh_key(mesh, in_shardings)), cache)
 
 

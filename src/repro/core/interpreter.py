@@ -39,6 +39,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax._src import core as jcore
 
+from repro.core.formats import parse_format
 from repro.core.policy import TruncationPolicy, TruncationRule, join_stack
 
 
@@ -46,8 +47,11 @@ def _safe_map(f, *xs):
     ls = [list(x) for x in xs]
     assert len({len(l) for l in ls}) == 1, 'length mismatch'
     return list(map(f, *ls))
+from repro.kernels import fp8_dot as _fp8
+from repro.kernels.fused import fused_outputs
 from repro.kernels.quantize_em.ops import (
-    quantize, quantize_dynamic, format_row, IDENTITY_ROW,
+    quantize, quantize_dynamic, quantize_prepared, prepare_dynamic,
+    format_row, IDENTITY_ROW,
 )
 
 # primitives whose *inputs* we optionally quantize to emulate a low-precision
@@ -73,11 +77,13 @@ def _maybe_quantize(val, rule: TruncationRule, impl: str):
 class _PolicyCtx:
     """Trace-time-constant formats: the original op-mode transform."""
 
-    __slots__ = ("policy", "impl", "live")
+    __slots__ = ("policy", "impl", "live", "native_fp8")
 
-    def __init__(self, policy: TruncationPolicy, impl: str):
+    def __init__(self, policy: TruncationPolicy, impl: str,
+                 native_fp8: bool = False):
         self.policy = policy
         self.impl = impl
+        self.native_fp8 = native_fp8
         # fast path: a policy with no rules can never match — skip the
         # per-equation-per-outvar matcher calls entirely (they are the
         # dominant python cost of walking big jaxprs; see test_interpreter).
@@ -90,7 +96,30 @@ class _PolicyCtx:
             rule0 = self.policy.rule_for(name_stack, prim.name,
                                          eqn.outvars[0].aval.dtype)
             if rule0 is not None and rule0.quantize_dot_inputs:
+                fp8 = self._native_fp8_rule(rule0, prim, eqn)
+                if fp8 is not None:
+                    return [_fp8.fp8_dot_general(
+                        invals[0], invals[1],
+                        eqn.params["dimension_numbers"],
+                        saturate=fp8.saturate,
+                        precision=eqn.params.get("precision"),
+                        out_dtype=eqn.outvars[0].aval.dtype)]
                 invals = [_maybe_quantize(v, rule0, self.impl) for v in invals]
+        routed = ()
+        if self.live:
+            fused_outs = fused_outputs(eqn)
+            if fused_outs is not None and len(fused_outs) == 1:
+                fi = fused_outs[0]
+                rule = self.policy.rule_for(name_stack, prim.name,
+                                            eqn.outvars[fi].aval.dtype)
+                if (rule is not None and rule.mask is None
+                        and not rule.quantize_dot_inputs):
+                    # route the static rule into the kernel's fused epilogue:
+                    # the format row replaces the scalar-prefetch operand and
+                    # the separate quantize pass for that output is dropped
+                    invals = [jnp.asarray(format_row(rule.fmt), jnp.int32),
+                              *invals[1:]]
+                    routed = (fi,)
         outvals = prim.bind(*invals, **eqn.params)
         if not prim.multiple_results:
             outvals = [outvals]
@@ -98,6 +127,8 @@ class _PolicyCtx:
         if not self.live:
             return outvals
         for i, (ov, var) in enumerate(zip(outvals, eqn.outvars)):
+            if i in routed:
+                continue
             aval = var.aval
             if not hasattr(aval, "dtype"):
                 continue
@@ -108,30 +139,84 @@ class _PolicyCtx:
                     outvals[i] = _maybe_quantize(ov, rule, self.impl)
         return outvals
 
+    def _native_fp8_rule(self, rule, prim, eqn):
+        """The parsed format when this dot eqn should take the native fp8
+        execution path (e4m3-storable format, plain two-operand dot with a
+        floating output), else None — emulated input quantize otherwise."""
+        if not self.native_fp8 or prim.name != "dot_general":
+            return None
+        if rule.mask is not None or len(eqn.invars) != 2:
+            return None
+        fmt = parse_format(rule.fmt)
+        if not _fp8.is_native_fp8_format(fmt):
+            return None
+        out_dt = eqn.outvars[0].aval.dtype
+        if not jnp.issubdtype(out_dt, jnp.floating):
+            return None
+        return fmt
+
 
 class _TableCtx:
     """Runtime-table formats: matching was pre-resolved into a SiteIndex, so
     the traced computation only carries static row indices into the traced
-    ``table`` argument."""
+    ``table`` argument.
 
-    __slots__ = ("table", "index", "impl")
+    On the ref impl (CPU, and every sweep) f32-carrier sites quantize
+    through the prepared-table path: the format-field derivation runs once
+    for the whole table (``prepare_dynamic``) and each site only slices its
+    row and runs the array math — without this, hundreds of inlined
+    derivations made the swept executable's one-off compile slower than
+    recompiling the static transform per candidate. The prep is derived
+    EAGERLY here, at the outer trace level: deriving it lazily at the first
+    site leaked tracers when that site sat inside a scan/while body (the
+    cached arrays belonged to the body's inner trace but outlived it).
+    Inner-scope sites closing over the outer-level prep is plain closure
+    capture and fine. f64 sites (rare: x64 oracle runs) and the pallas
+    impls keep the per-site ``quantize_dynamic`` call."""
+
+    __slots__ = ("table", "index", "impl", "_prep32")
 
     def __init__(self, table, index: "SiteIndex", impl: str):
         self.table = table
         self.index = index
         self.impl = impl
+        self._prep32 = prepare_dynamic(table, jnp.float32)
+
+    def _quantize_site(self, val, site: int):
+        impl = self.impl
+        if impl == "auto":
+            impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+        if (impl != "ref" or not hasattr(val, "dtype")
+                or jnp.dtype(val.dtype) == jnp.dtype(jnp.float64)):
+            return quantize_dynamic(val, self.table[site], impl=impl)
+        if not jnp.issubdtype(jnp.dtype(val.dtype), jnp.floating):
+            return val
+        return quantize_prepared(val, self._prep32, site)
 
     def eqn_outputs(self, jaxpr, eqn_idx, eqn, invals, name_stack):
         prim = eqn.primitive
+        routed = ()
+        fused_outs = fused_outputs(eqn)
+        if fused_outs is not None and len(fused_outs) == 1:
+            fi = fused_outs[0]
+            site = self.index.lookup(jaxpr, eqn_idx, fi, name_stack)
+            if site is not None:
+                # route the site's table row into the kernel's fused quantize
+                # epilogue (replacing the scalar-prefetch operand) instead of
+                # appending a separate quantize kernel after the call
+                invals = [jnp.asarray(self.table[site], jnp.int32),
+                          *invals[1:]]
+                routed = (fi,)
         outvals = prim.bind(*invals, **eqn.params)
         if not prim.multiple_results:
             outvals = [outvals]
         outvals = list(outvals)
         for i in range(len(outvals)):
+            if i in routed:
+                continue
             site = self.index.lookup(jaxpr, eqn_idx, i, name_stack)
             if site is not None:
-                outvals[i] = quantize_dynamic(outvals[i], self.table[site],
-                                              impl=self.impl)
+                outvals[i] = self._quantize_site(outvals[i], site)
         return outvals
 
 
@@ -146,7 +231,7 @@ def _jit_sharded(fn, flat_shardings):
 
 def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
                        policy: TruncationPolicy, impl: str = "auto",
-                       *, flat_shardings=None):
+                       *, flat_shardings=None, native_fp8: bool = False):
     """jit-close the transformed computation once. The jaxpr walk (and its
     per-equation policy matching) happens a single time, at trace; every
     subsequent call with the same avals hits XLA's executable cache, so
@@ -160,7 +245,7 @@ def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
     pipeline, formats and semantics unchanged."""
     def run(flat):
         outs = eval_quantized(closed.jaxpr, closed.consts, list(flat),
-                              policy, impl)
+                              policy, impl, native_fp8=native_fp8)
         return jax.tree_util.tree_unflatten(out_tree, outs)
 
     return _jit_sharded(run, flat_shardings)
@@ -168,9 +253,14 @@ def quantized_callable(closed: jcore.ClosedJaxpr, out_tree,
 
 def eval_quantized(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
                    policy: TruncationPolicy, impl: str = "auto",
-                   prefix: str = "") -> List[Any]:
-    """Evaluate ``jaxpr`` with op-mode truncation under ``policy``."""
-    return _eval(jaxpr, consts, args, _PolicyCtx(policy, impl), prefix)
+                   prefix: str = "", *, native_fp8: bool = False) -> List[Any]:
+    """Evaluate ``jaxpr`` with op-mode truncation under ``policy``.
+
+    ``native_fp8``: run ``quantize_dot_inputs`` dot sites whose format maps
+    onto ``float8_e4m3fn`` on the native fp8 execution path (fp8 storage,
+    f32 accumulation) instead of emulating the rounding in the carrier."""
+    return _eval(jaxpr, consts, args, _PolicyCtx(policy, impl, native_fp8),
+                 prefix)
 
 
 def _eval(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],

@@ -147,14 +147,21 @@ class _Recorder:
     """Mutable-during-trace location table; emits functional accumulators.
 
     ``traj_len > 0`` switches the stats carry into trajectory mode: the
-    tuple grows ``(traj_len, n_loc)`` ring buffers plus a step counter (see
-    module docstring)."""
+    tuple grows ring buffers plus a step counter (see module docstring).
+    ``traj_sites`` (substring patterns over location descriptions) narrows
+    which locations get trajectory columns — blamed/selected sites only —
+    shrinking the per-step carry; unselected sites keep their whole-run
+    totals and simply have no temporal row."""
 
-    def __init__(self, threshold: float, traj_len: int = 0):
+    def __init__(self, threshold: float, traj_len: int = 0, traj_sites=None):
         self.threshold = threshold
         self.traj_len = int(traj_len)
+        self.traj_sites = (tuple(traj_sites) if traj_sites is not None
+                           else None)
         self.locations: List[str] = []
         self.loc_index: Dict[str, int] = {}
+        self.traj_cols: Dict[int, int] = {}
+        self.n_traj = 1
 
     def loc_id(self, desc: str) -> int:
         if desc not in self.loc_index:
@@ -162,26 +169,45 @@ class _Recorder:
             self.locations.append(desc)
         return self.loc_index[desc]
 
+    def freeze_traj_cols(self) -> None:
+        """Assign trajectory columns once the location table is complete."""
+        if self.traj_sites is None:
+            self.traj_cols = {i: i for i in range(len(self.locations))}
+        else:
+            self.traj_cols = {}
+            for i, desc in enumerate(self.locations):
+                if any(pat in desc for pat in self.traj_sites):
+                    self.traj_cols[i] = len(self.traj_cols)
+        self.n_traj = max(len(self.traj_cols), 1)
+
+    def traj_col(self, idx: int):
+        return self.traj_cols.get(idx)
+
 
 def _count_dtype():
     return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
 
 
-def _zero_stats(n: int, traj_len: int = 0):
+def _zero_stats(n: int, traj_len: int = 0, n_traj=None):
     cdt = _count_dtype()
     base = (jnp.zeros((n,), cdt),
             jnp.zeros((n,), jnp.float32),
             jnp.zeros((n,), cdt))
     if not traj_len:
         return base
-    return base + (jnp.zeros((traj_len, n), jnp.float32),   # per-step max dev
-                   jnp.zeros((traj_len, n), jnp.float32),   # per-step |err| sum
-                   jnp.zeros((traj_len, n), jnp.float32),   # per-step |shadow| sum
-                   jnp.zeros((traj_len, n), cdt),           # per-step elements
+    nt = n if n_traj is None else n_traj
+    return base + (jnp.zeros((traj_len, nt), jnp.float32),  # ring: max dev
+                   jnp.zeros((traj_len, nt), jnp.float32),  # ring: |err| sum
+                   jnp.zeros((traj_len, nt), jnp.float32),  # ring: |shadow| sum
+                   jnp.zeros((traj_len, nt), cdt),          # ring: elements
+                   jnp.zeros((nt,), jnp.float32),           # step row: max dev
+                   jnp.zeros((nt,), jnp.float32),           # step row: |err|
+                   jnp.zeros((nt,), jnp.float32),           # step row: |shadow|
+                   jnp.zeros((nt,), cdt),                   # step row: elements
                    jnp.zeros((), jnp.int32))                # step counter
 
 
-def _accumulate(stats, idx: int, low, shadow, threshold: float):
+def _accumulate(stats, idx: int, low, shadow, threshold: float, tcol=None):
     flags, max_rel, op_counts, *traj = stats
     lowf = low.astype(jnp.float32)
     shf = shadow.astype(jnp.float32)
@@ -193,33 +219,62 @@ def _accumulate(stats, idx: int, low, shadow, threshold: float):
     op_counts = op_counts.at[idx].add(jnp.asarray(low.size, op_counts.dtype))
     if not traj:
         return (flags, max_rel, op_counts)
-    t_max, t_abs, t_mag, t_cnt, step = traj
-    row = jnp.remainder(step, t_max.shape[0])
-    # absolute error with the same equal-lanes/NaN conventions as deviation()
+    if tcol is None:
+        return (flags, max_rel, op_counts, *traj)
+    (t_max, t_abs, t_mag, t_cnt,
+     r_max, r_abs, r_mag, r_cnt, step) = traj
+    # Per-op writes touch only the small (n_traj,) current-step row at a
+    # STATIC column (a cheap size-1 update, not a dynamic-index scatter on
+    # the (traj_len, n_traj) ring); the ring buffers are written once per
+    # step by _fold_step_row. This is what keeps trajectory mode close to
+    # plain memtrace cost.
     aerr = jnp.abs(lowf - shf)
     aerr = jnp.where(lowf == shf, jnp.zeros_like(aerr), aerr)
     aerr = jnp.where(jnp.isnan(aerr), jnp.full_like(aerr, jnp.inf), aerr)
     err_sum = (jnp.sum(aerr) if rel.size else jnp.float32(0))
     mag_sum = (jnp.sum(jnp.abs(shf)) if rel.size else jnp.float32(0))
-    t_max = t_max.at[row, idx].max(m)
-    t_abs = t_abs.at[row, idx].add(err_sum.astype(jnp.float32))
-    t_mag = t_mag.at[row, idx].add(mag_sum.astype(jnp.float32))
-    t_cnt = t_cnt.at[row, idx].add(jnp.asarray(low.size, t_cnt.dtype))
-    return (flags, max_rel, op_counts, t_max, t_abs, t_mag, t_cnt, step)
+    r_max = r_max.at[tcol].max(m)
+    r_abs = r_abs.at[tcol].add(err_sum.astype(jnp.float32))
+    r_mag = r_mag.at[tcol].add(mag_sum.astype(jnp.float32))
+    r_cnt = r_cnt.at[tcol].add(jnp.asarray(low.size, r_cnt.dtype))
+    return (flags, max_rel, op_counts, t_max, t_abs, t_mag, t_cnt,
+            r_max, r_abs, r_mag, r_cnt, step)
+
+
+def _fold_step_row(stats):
+    """Fold the current-step row accumulators into the ring buffers at
+    ``step % traj_len`` and clear them. Values land in the same rows the
+    old per-op ring writes used (max-of-maxes / sum-of-sums, and untouched
+    columns fold max(.., 0)/+0 — exact no-ops on the non-negative stats),
+    so the report is unchanged; only the write traffic moves."""
+    if len(stats) == 3:
+        return stats
+    (flags, max_rel, op_counts, t_max, t_abs, t_mag, t_cnt,
+     r_max, r_abs, r_mag, r_cnt, step) = stats
+    row = jnp.remainder(step, t_max.shape[0])
+    t_max = t_max.at[row].max(r_max)
+    t_abs = t_abs.at[row].add(r_abs)
+    t_mag = t_mag.at[row].add(r_mag)
+    t_cnt = t_cnt.at[row].add(r_cnt)
+    return (flags, max_rel, op_counts, t_max, t_abs, t_mag, t_cnt,
+            jnp.zeros_like(r_max), jnp.zeros_like(r_abs),
+            jnp.zeros_like(r_mag), jnp.zeros_like(r_cnt), step)
 
 
 def _bump_step(stats):
     """Advance the trajectory step counter (end of one outermost-loop
-    iteration); identity for non-trajectory stats."""
+    iteration), folding the finished step's row into the ring first;
+    identity for non-trajectory stats."""
     if len(stats) == 3:
         return stats
+    stats = _fold_step_row(stats)
     return stats[:-1] + (stats[-1] + jnp.int32(1),)
 
 
 def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
                       policy: TruncationPolicy, threshold: float,
                       impl: str = "auto", *, flat_shardings=None,
-                      traj_len: int = 0):
+                      traj_len: int = 0, traj_sites=None):
     """jit-close the paired (truncated, shadow) evaluation once — the
     mem-mode analogue of ``interpreter.quantized_callable``. The RaptorReport
     rides out of jit as a pytree (static location table, array stats).
@@ -235,7 +290,7 @@ def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
     def run(flat):
         outs, report = eval_shadowed(closed.jaxpr, closed.consts, list(flat),
                                      policy, threshold, impl,
-                                     traj_len=traj_len)
+                                     traj_len=traj_len, traj_sites=traj_sites)
         return jax.tree_util.tree_unflatten(out_tree, outs), report
 
     return _jit_sharded(run, flat_shardings)
@@ -243,30 +298,39 @@ def shadowed_callable(closed: jcore.ClosedJaxpr, out_tree,
 
 def eval_shadowed(jaxpr: jcore.Jaxpr, consts: Sequence[Any], args: Sequence[Any],
                   policy: TruncationPolicy, threshold: float, impl: str = "auto",
-                  *, traj_len: int = 0) -> Tuple[List[Any], Any]:
+                  *, traj_len: int = 0,
+                  traj_sites=None) -> Tuple[List[Any], Any]:
     """Two-pass evaluation: first a dry trace to build the static location
     table (so the stats arrays have a fixed shape), then the paired eval.
 
     Returns ``(outs, RaptorReport)``; with ``traj_len > 0`` the report is a
     :class:`repro.profile.trajectory.TrajectoryReport` whose ring buffers
-    hold one row per outermost-loop iteration (modulo ``traj_len``)."""
-    rec = _Recorder(threshold, traj_len)
+    hold one row per outermost-loop iteration (modulo ``traj_len``).
+    ``traj_sites`` (substring patterns over location descriptions) narrows
+    the trajectory columns to the matching locations."""
+    rec = _Recorder(threshold, traj_len, traj_sites)
     _collect_locations(jaxpr, policy, rec, "")
     n = max(len(rec.locations), 1)
     if not rec.locations:
         rec.loc_id("<no truncated locations>")
+    rec.freeze_traj_cols()
 
-    stats = _zero_stats(n, traj_len)
+    stats = _zero_stats(n, traj_len, rec.n_traj if traj_len else None)
     outs, _, stats = _eval(jaxpr, consts, args, args, policy, threshold, impl,
                            rec, stats)
+    # residual fold: ops after (or outside) the outermost loops accumulated
+    # into the current-step row since the last bump — land them in the ring
+    stats = _fold_step_row(stats)
     report = RaptorReport(tuple(rec.locations), stats[0], stats[1], stats[2])
     if traj_len:
         from repro.profile.trajectory import TrajectoryReport, scope_of_location
+        cols = sorted(rec.traj_cols, key=rec.traj_cols.get)
         report = TrajectoryReport(
             totals=report,
-            scopes=tuple(scope_of_location(l) for l in rec.locations),
+            scopes=tuple(scope_of_location(rec.locations[i]) for i in cols),
             max_rel=stats[3], abs_sum=stats[4], mag_sum=stats[5],
-            op_counts=stats[6], steps_seen=stats[7])
+            op_counts=stats[6], steps_seen=stats[-1],
+            columns=tuple(cols))
     return outs, report
 
 
@@ -359,7 +423,8 @@ def _eval(jaxpr, consts, low_args, shadow_args, policy, threshold, impl,
                         q = jnp.where(rule.mask(louts[i]), q, louts[i])
                     louts[i] = q
                     idx = rec.loc_id(_loc_desc(eqn, prefix))
-                    stats = _accumulate(stats, idx, q, shouts[i], threshold)
+                    stats = _accumulate(stats, idx, q, shouts[i], threshold,
+                                        rec.traj_col(idx))
         for var, lo, sh in zip(eqn.outvars, louts, shouts):
             write(var, lo, sh)
 

@@ -117,6 +117,39 @@ def estimate_speedup(report: CountReport,
     )
 
 
+@dataclasses.dataclass
+class Reconciliation:
+    """Measured-vs-modeled speedup reconciliation for one experiment.
+
+    ``gap`` is the fraction of the modeled win the measurement realized
+    (measured / modeled): 1.0 means the model was exact, < 1.0 means the
+    backend under-delivers (e.g. no fp8 matrix unit on the measuring host),
+    > 1.0 means the model was conservative (e.g. fusion savings the compute
+    term does not credit)."""
+    measured: float
+    modeled: float
+
+    @property
+    def gap(self) -> float:
+        return self.measured / max(self.modeled, 1e-30)
+
+    def within(self, tol: float) -> bool:
+        """True when the measurement is within ``tol`` (relative) of the
+        model on either side."""
+        return abs(self.gap - 1.0) <= tol
+
+
+def reconcile(measured: float, modeled: float) -> Reconciliation:
+    """Pair a measured wall-clock speedup with its model prediction.
+
+    The benchmarks emit both numbers side by side (BENCH rows) so every
+    predicted speedup in the repo — the roofline's compute term, Fig. 8's
+    co-design model — is validated against a measured ratio on the same
+    artifact, and the gap between them is a tracked, gateable quantity
+    rather than prose."""
+    return Reconciliation(measured=float(measured), modeled=float(modeled))
+
+
 def fpu_area_model(counts_by_fmt: Mapping[str, float],
                    density: Mapping[str, float] = FPNEW_PERF_DENSITY,
                    area_ratio_dbl_low: Optional[float] = None,

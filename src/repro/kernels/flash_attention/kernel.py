@@ -18,12 +18,22 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize_em import ref as _qref
 
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
-                 seq_len, causal, window):
+def _attn_kernel(*refs, scale, block_q, block_k, seq_len, causal, window,
+                 quantized=False):
+    if quantized:
+        # fused epilogue: the (4,) int32 runtime format row arrives first,
+        # as an SMEM scalar-prefetch operand (same vector the standalone
+        # quantize_em kernel prefetches)
+        fmt_ref, q_ref, k_ref, v_ref, o_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref = refs
     qb = pl.program_id(2)
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (block_q, D)
 
@@ -59,7 +69,12 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
     # causal: only kv blocks intersecting the lower triangle
     nk_eff = ((qb + 1) * block_q + block_k - 1) // block_k if causal else nk
     m, l, acc = jax.lax.fori_loop(0, nk_eff, body, (m0, l0, a0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    if quantized:
+        # quantize the *stored* value (post output-dtype cast) so the fused
+        # kernel is bit-identical to unfused kernel + quantize_dynamic
+        out = _qref.quantize_epilogue(out, fmt_ref)
+    o_ref[0, 0] = out
 
 
 @functools.partial(
@@ -68,8 +83,15 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
                      "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
                            scale=None, block_q: int = 512, block_k: int = 512,
-                           interpret: bool = False):
-    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D/Dv). Returns (B, Hq, S, Dv)."""
+                           interpret: bool = False, out_fmt=None):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D/Dv). Returns (B, Hq, S, Dv).
+
+    ``out_fmt`` (optional): a (4,) int32 runtime format row
+    (exp_bits, man_bits, saturate, ieee_inf | fault << 1). When given, the
+    dynamic quantize runs as a fused epilogue on the output store — one
+    kernel instead of kernel + separate quantize pass — and the row is
+    runtime *data* (scalar prefetch), so swapping formats never recompiles.
+    """
     B, Hq, S, D = q.shape
     Hkv = k.shape[1]
     Dv = v.shape[-1]
@@ -84,21 +106,41 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
     vr = v.reshape(B * Hkv, S // block_k, block_k, Dv)
     grid = (B * Hkv, G, S // block_q)
 
-    out = pl.pallas_call(
-        functools.partial(_attn_kernel, scale=scale, block_q=block_q,
-                          block_k=block_k, seq_len=S, causal=causal,
-                          window=window),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda bh, g, qb: (bh, g, qb, 0)),
-            pl.BlockSpec((1, S // block_k, block_k, D),
-                         lambda bh, g, qb: (bh, 0, 0, 0)),
-            pl.BlockSpec((1, S // block_k, block_k, Dv),
-                         lambda bh, g, qb: (bh, 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, block_q, Dv),
-                               lambda bh, g, qb: (bh, g, qb, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, S, Dv), q.dtype),
-        interpret=interpret,
-    )(qr, kr, vr)
+    kernel = functools.partial(_attn_kernel, scale=scale, block_q=block_q,
+                               block_k=block_k, seq_len=S, causal=causal,
+                               window=window, quantized=out_fmt is not None)
+    in_blocks = [
+        ((1, 1, block_q, D), lambda bh, g, qb: (bh, g, qb, 0)),
+        ((1, S // block_k, block_k, D), lambda bh, g, qb: (bh, 0, 0, 0)),
+        ((1, S // block_k, block_k, Dv), lambda bh, g, qb: (bh, 0, 0, 0)),
+    ]
+    out_block = ((1, 1, block_q, Dv), lambda bh, g, qb: (bh, g, qb, 0))
+    out_shape = jax.ShapeDtypeStruct((B * Hkv, G, S, Dv), q.dtype)
+
+    if out_fmt is None:
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(b, ix) for b, ix in in_blocks],
+            out_specs=pl.BlockSpec(*out_block),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(qr, kr, vr)
+    else:
+        # index maps gain the trailing prefetch ref arg (unused for tiling)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(b, lambda bh, g, qb, fmt, ix=ix: ix(bh, g, qb))
+                      for b, ix in in_blocks],
+            out_specs=pl.BlockSpec(
+                out_block[0],
+                lambda bh, g, qb, fmt, ix=out_block[1]: ix(bh, g, qb)),
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(out_fmt, jnp.int32), qr, kr, vr)
     return out.reshape(B, Hq, S, Dv)

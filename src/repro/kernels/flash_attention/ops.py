@@ -9,18 +9,26 @@ from __future__ import annotations
 import jax
 
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.quantize_em.ops import quantize_dynamic
 from repro.models.attention import flash_attention as flash_attention_xla
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window=None, scale=None,
-                    impl: str = "auto", **kw):
+                    impl: str = "auto", out_fmt=None, **kw):
+    """``out_fmt``: optional (4,) int32 runtime format row. On the Pallas
+    paths the dynamic quantize runs as a fused in-kernel epilogue; on the
+    XLA path it composes as a separate pass — bit-identical either way."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "pallas":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                      scale=scale, **kw)
+                                      scale=scale, out_fmt=out_fmt, **kw)
     if impl == "interpret":
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
-                                      scale=scale, interpret=True, **kw)
-    return flash_attention_xla(q, k, v, causal=causal, window=window,
-                               scale=scale)
+                                      scale=scale, interpret=True,
+                                      out_fmt=out_fmt, **kw)
+    out = flash_attention_xla(q, k, v, causal=causal, window=window,
+                              scale=scale)
+    if out_fmt is not None:
+        out = quantize_dynamic(out, out_fmt, impl="ref")
+    return out

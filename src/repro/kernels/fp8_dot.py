@@ -1,0 +1,64 @@
+"""Native fp8 (e4m3) dot path for ``quantize_dot_inputs`` sites.
+
+The emulated path rounds each dot operand onto the e4m3 grid but keeps the
+values in the carrier dtype, so the MXU still runs at carrier width — the
+profiler measures *accuracy* of the policy, not its speed. This module is
+the execution path: operands are stored as ``float8_e4m3fn`` and the dot
+accumulates in f32 (``preferred_element_type``), which is what actually
+exercises a low-precision matrix unit.
+
+Bit-exactness: XLA's ``f32 -> float8_e4m3fn`` convert double-rounds through
+bf16 on CPU (observed on jax 0.4.37: ``astype`` disagrees with ml_dtypes'
+correctly-rounded cast), so the hardware cast is NOT trusted to round.
+Instead each operand is pre-rounded onto the e4m3 grid with the repo's
+bit-exact quantizer — after which the storage cast is exact, because every
+e4m3 grid value is exactly representable in bf16 and f32 (3 mantissa bits,
+exponent range inside bf16's), making any double-rounding an identity. The
+conformance tier sweeps this input quantize against the bit oracle.
+
+Specials: ``float8_e4m3fn`` has no infinities, so an operand that is (or
+pre-rounds to) +/-inf is stored as NaN — the same degradation real fp8
+storage applies. Finite operands (every profiling configuration in this
+repo) are bit-exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.quantize_em import ref as _ref
+
+F8_DTYPE = jnp.float8_e4m3fn
+
+
+def is_native_fp8_format(fmt) -> bool:
+    """True when ``fmt`` (an ``FPFormat``) maps onto float8_e4m3fn storage:
+    (e=4, m=3) with fn overflow semantics — saturating (clamp to +/-448,
+    still on the storage grid) or non-saturating (overflow -> NaN, the
+    ml_dtypes cast behaviour). IEEE-inf e4m3 layouts have no storage type."""
+    return (fmt.exp_bits == 4 and fmt.man_bits == 3 and not fmt.ieee_inf)
+
+
+def quantize_dot_operand(x, *, saturate: bool = True):
+    """Pre-round a dot operand onto the e4m3 grid (f32 carrier), matching
+    the interpreter's emulated input quantize bit-for-bit."""
+    return _ref.quantize_ref(x.astype(jnp.float32), 4, 3, saturate, False)
+
+
+def encode_e4m3(xq):
+    """Cast values already on the e4m3 grid to fp8 storage (exact)."""
+    return xq.astype(F8_DTYPE)
+
+
+def fp8_dot_general(lhs, rhs, dimension_numbers, *, saturate: bool = True,
+                    precision=None, out_dtype=None):
+    """``lax.dot_general`` with e4m3-quantized operands on native fp8
+    storage, accumulating in f32. Input quantize is the bit oracle's
+    rounding; the contraction itself runs on the fp8 execution path."""
+    lq = encode_e4m3(quantize_dot_operand(lhs, saturate=saturate))
+    rq = encode_e4m3(quantize_dot_operand(rhs, saturate=saturate))
+    out = lax.dot_general(lq, rq, dimension_numbers, precision=precision,
+                          preferred_element_type=jnp.float32)
+    if out_dtype is not None:
+        out = out.astype(out_dtype)
+    return out

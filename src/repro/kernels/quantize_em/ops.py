@@ -127,25 +127,77 @@ def quantize_dynamic(x, fmt, *, impl: str = "auto"):
     if dt is None or not jnp.issubdtype(dt, jnp.floating):
         return x
     fmt = jnp.asarray(fmt, jnp.int32)
-    fault = fmt[3] >> 1
-    fmt = fmt.at[3].set(fmt[3] & 1)
+    # scalar unpack, no scatter: the old `fmt.at[3].set(fmt[3] & 1)` strip
+    # emitted one (batched, under vmap) scatter per truncation site, which
+    # dominated trace+compile time on table sweeps (hundreds of sites per
+    # program — the batched sweep's first call regressed below the static
+    # path on exactly this).
+    e, m, s, f3 = fmt[0], fmt[1], fmt[2], fmt[3]
+    fault = jnp.right_shift(f3, 1)
+    inf = jnp.bitwise_and(f3, 1)
 
     # carrier selection mirrors the static path: f64 stays f64, rest via f32
     if dt == jnp.dtype(jnp.float64):
-        y = _ref.quantize_ref_dynamic(x, fmt[0], fmt[1], fmt[2], fmt[3])
-        return _bitflip(y, fault)
+        p = _ref.dynamic_row_params(e, m, s, inf, fault, jnp.float64)
+        return _ref.apply_row_params(x, p)
 
     xf = x.astype(jnp.float32)
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "ref"
 
     if impl == "ref":
-        y = _ref.quantize_ref_dynamic(xf, fmt[0], fmt[1], fmt[2], fmt[3])
-    elif impl in ("pallas", "interpret"):
-        y = _pallas_any_shape_dynamic(xf, fmt, interpret=(impl == "interpret"))
-    else:
-        raise ValueError(f"unknown impl {impl!r}")
-    return _bitflip(y, fault).astype(dt)
+        p = _ref.dynamic_row_params(e, m, s, inf, fault)
+        return _ref.apply_row_params(xf, p).astype(dt)
+    if impl in ("pallas", "interpret"):
+        y = _pallas_any_shape_dynamic(xf, jnp.stack([e, m, s, inf]),
+                                      interpret=(impl == "interpret"))
+        return _bitflip(y, fault).astype(dt)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+# --------------------------------------------------------------------------
+# prepared-table path: derive row constants once, apply cheaply per site
+# --------------------------------------------------------------------------
+#
+# A runtime-table sweep quantizes hundreds of sites per program, and the
+# dynamic quantizer spends about as many graph ops deriving constants from
+# the format fields (bias, bounds, masks — ~30 scalar ops) as it does on
+# the array math. Inlining that derivation at every site made the swept
+# executable's graph several times the static transform's and pushed its
+# one-off XLA compile above SIX static compiles (the "first call slower
+# than static" regression). ``prepare_dynamic`` derives the constants for
+# the WHOLE table in one vectorized block; each site then slices its row
+# and runs only the array-side math, jit-wrapped so tracing is paid once
+# per distinct operand shape instead of once per site.
+
+@jax.jit
+def _apply_row(x, prep, site):
+    """jit-shared slice + apply: the row index is a *traced* scalar, so one
+    trace (and one compiled subgraph) serves every site with ``x``'s shape —
+    per-site trace cost collapses from the whole quantizer to one call."""
+    return _ref.apply_row_params(x, {k: v[site] for k, v in prep.items()})
+
+
+def prepare_dynamic(table, dtype=jnp.float32):
+    """Vectorized derived constants for every row of a ``(num_sites, 4)``
+    format table (fault channel included): one dict of ``(num_sites,)``
+    arrays consumed by :func:`quantize_prepared`."""
+    t = jnp.asarray(table, jnp.int32)
+    e, m, s, f3 = t[..., 0], t[..., 1], t[..., 2], t[..., 3]
+    return _ref.dynamic_row_params(e, m, s, jnp.bitwise_and(f3, 1),
+                                   jnp.right_shift(f3, 1), dtype)
+
+
+def quantize_prepared(x, prep, site: int):
+    """Quantize ``x`` onto row ``site`` of a prepared table — bit-identical
+    to ``quantize_dynamic(x, table[site], impl='ref')``. ``prep`` must have
+    been built for ``x``'s carrier (f32 for everything but f64 inputs)."""
+    dt = jnp.dtype(x.dtype) if hasattr(x, "dtype") else None
+    if dt is None or not jnp.issubdtype(dt, jnp.floating):
+        return x
+    if dt == jnp.dtype(jnp.float64):
+        return _apply_row(x, prep, site)
+    return _apply_row(x.astype(jnp.float32), prep, site).astype(dt)
 
 
 def _to_rows(xf):

@@ -132,15 +132,21 @@ def _pow2(n, dt):
         jnp.left_shift(biased, jnp.asarray(man, int_dtype)), jnp.dtype(dt))
 
 
-def quantize_ref_dynamic(x, exp_bits, man_bits, saturate, ieee_inf):
-    """Quantize carrier array ``x`` (f32/f64) onto the (e, m) grid where the
-    format fields are *runtime* scalars (python ints or traced int32).
+def dynamic_row_params(exp_bits, man_bits, saturate, ieee_inf, fault=0,
+                       dtype=jnp.float32):
+    """Derived rounding constants for the runtime quantizer, elementwise.
 
-    Bit-for-bit identical to ``quantize_ref`` for any format whose mantissa
-    fits the carrier (``man_bits <= nmant``); formats at least as fine as the
-    carrier grid (and with IEEE overflow) are returned unchanged via the
-    in-kernel identity gate."""
-    dt = jnp.dtype(x.dtype)
+    Every quantity ``quantize_ref_dynamic`` derives from the format fields —
+    rounding masks, range bounds, gates, the fault XOR mask — but none of
+    the array-side math. Inputs may be python ints, traced scalars, or
+    whole ``(num_sites,)`` table columns: the math is elementwise, so one
+    call derives the constants for an entire format table at once. That is
+    the point of the split — a runtime-table sweep derives its ~30 scalar
+    ops once per *table* instead of once per *site*, which is what keeps
+    the swept executable's graph (and XLA compile time) near the static
+    transform's. Returns a dict of arrays parallel to the inputs.
+    """
+    dt = jnp.dtype(dtype)
     if dt not in _CARRIER:
         raise TypeError(f"carrier must be f32/f64, got {dt}")
     int_dtype, c_man = _CARRIER[dt]
@@ -151,6 +157,7 @@ def quantize_ref_dynamic(x, exp_bits, man_bits, saturate, ieee_inf):
     m = jnp.asarray(man_bits, jnp.int32)
     sat = jnp.asarray(saturate, jnp.bool_)
     inf = jnp.asarray(ieee_inf, jnp.bool_)
+    fault = jnp.asarray(fault, jnp.int32)
 
     bias = jnp.left_shift(1, e - 1) - 1
     max_exp = jnp.left_shift(1, e) - jnp.where(inf, 2, 1) - bias
@@ -162,35 +169,123 @@ def quantize_ref_dynamic(x, exp_bits, man_bits, saturate, ieee_inf):
     min_normal = _pow2(min_exp, dt)
     sub_scale = _pow2(min_exp - m, dt)
 
-    # ---- 1) normal-range mantissa RNE, traced shift amounts ----------------
     one = jnp.asarray(1, int_dtype)
     k = jnp.clip(c_man - m, 0, c_man)
     kk = k.astype(int_dtype)
-    bits = lax.bitcast_convert_type(x, int_dtype)
     half = jnp.left_shift(one, jnp.maximum(kk - one, 0))
     keep = jnp.bitwise_not(jnp.left_shift(one, kk) - one)
-    # bit k of a two's-complement int is shift-direction agnostic, so the
-    # arithmetic right_shift (which broadcasts) stands in for the logical one
-    lsb = jnp.bitwise_and(jnp.right_shift(bits, kk), one)
-    rounded = jnp.bitwise_and(bits + (half - one) + lsb, keep)
-    y = jnp.where(k > 0, lax.bitcast_convert_type(rounded, dt), x)
-
-    # ---- 2) subnormal range: RNE onto the fixed-point grid -----------------
     tiny = np.array(finfo.tiny, dt)
     use_sub = (e < c_exp) & (sub_scale >= tiny)
     ss = jnp.where(use_sub, sub_scale, np.array(1.0, dt))
-    x_sub = jnp.rint(x / ss) * ss
-    y = jnp.where(use_sub & (jnp.abs(x) < min_normal), x_sub, y)
+    # exact reciprocal: ss is a power of two >= the carrier's tiny, so 1/ss
+    # is finite and x * (1/ss) == x / ss bit-for-bit. Multiplying is much
+    # cheaper for XLA's CPU backend to compile than the division (the
+    # subnormal section dominated the swept executable's compile time).
+    ssinv = jnp.where(use_sub, np.array(1.0, dt) / ss, np.array(1.0, dt))
+    ovf_gate = max_finite <= np.array(finfo.max, dt)
+    # overflow magnitude for the sign-carrying cases; the fn (overflow->NaN)
+    # case is selected separately in apply so the stored NaN stays the
+    # positive quiet-NaN constant, never a sign-flipped product
+    ovf_mag = jnp.where(sat, max_finite, np.array(np.inf, dt))
+    ovf_nan = ~sat & ~inf
+    identity = (m >= c_man) & (e >= c_exp) & inf & ~sat
+    fshift = jnp.maximum(fault - 1, 0).astype(int_dtype)
+    fmask = jnp.where(fault > 0, jnp.left_shift(one, fshift),
+                      jnp.asarray(0, int_dtype))
+    return dict(kk=kk, half=half, keep=keep, knz=k > 0,
+                use_sub=use_sub, ss=ss, ssinv=ssinv, min_normal=min_normal,
+                ovf_gate=ovf_gate, max_finite=max_finite, ovf_mag=ovf_mag,
+                ovf_nan=ovf_nan, identity=identity, fmask=fmask)
+
+
+def apply_row_params(x, p):
+    """Quantize carrier array ``x`` with precomputed row constants ``p``
+    (one row of :func:`dynamic_row_params`, i.e. scalar entries), including
+    the fault-channel XOR (``fmask == 0`` is an exact bit no-op)."""
+    dt = jnp.dtype(x.dtype)
+    int_dtype, _ = _CARRIER[dt]
+    one = jnp.asarray(1, int_dtype)
+
+    # ---- 1) normal-range mantissa RNE, traced shift amounts ----------------
+    # bit k of a two's-complement int is shift-direction agnostic, so the
+    # arithmetic right_shift (which broadcasts) stands in for the logical one
+    bits = lax.bitcast_convert_type(x, int_dtype)
+    lsb = jnp.bitwise_and(jnp.right_shift(bits, p["kk"]), one)
+    rounded = jnp.bitwise_and(bits + (p["half"] - one) + lsb, p["keep"])
+    y = jnp.where(p["knz"], lax.bitcast_convert_type(rounded, dt), x)
+
+    # ---- 2) subnormal range: RNE onto the fixed-point grid -----------------
+    x_sub = jnp.rint(x * p["ssinv"]) * p["ss"]
+    y = jnp.where(p["use_sub"] & (jnp.abs(x) < p["min_normal"]), x_sub, y)
 
     # ---- 3) overflow --------------------------------------------------------
-    ovf = (max_finite <= np.array(finfo.max, dt)) & (jnp.abs(y) > max_finite)
-    sgn = jnp.sign(y)
-    y = jnp.where(ovf & sat, sgn * max_finite, y)
-    y = jnp.where(ovf & ~sat & inf, sgn * np.array(np.inf, dt), y)
-    y = jnp.where(ovf & ~sat & ~inf, np.array(np.nan, dt), y)
+    ovf = p["ovf_gate"] & (jnp.abs(y) > p["max_finite"])
+    ovf_val = jnp.where(p["ovf_nan"], np.array(np.nan, dt),
+                        jnp.copysign(p["ovf_mag"], y))
+    y = jnp.where(ovf, ovf_val, y)
 
-    # ---- 4) specials + identity gate ---------------------------------------
-    y = jnp.where(jnp.isnan(x), x, y)
-    y = jnp.where(jnp.isinf(x), x, y)
-    identity = (m >= c_man) & (e >= c_exp) & inf & ~sat
-    return jnp.where(identity, x, y)
+    # ---- 4) specials + identity gate (all branches restore x) --------------
+    y = jnp.where(jnp.isnan(x) | jnp.isinf(x) | p["identity"], x, y)
+
+    # ---- 5) fault channel ---------------------------------------------------
+    yb = lax.bitcast_convert_type(y, int_dtype)
+    return lax.bitcast_convert_type(jnp.bitwise_xor(yb, p["fmask"]), dt)
+
+
+def quantize_ref_dynamic(x, exp_bits, man_bits, saturate, ieee_inf):
+    """Quantize carrier array ``x`` (f32/f64) onto the (e, m) grid where the
+    format fields are *runtime* scalars (python ints or traced int32).
+
+    Bit-for-bit identical to ``quantize_ref`` for any format whose mantissa
+    fits the carrier (``man_bits <= nmant``); formats at least as fine as the
+    carrier grid (and with IEEE overflow) are returned unchanged via the
+    in-kernel identity gate."""
+    dt = jnp.dtype(x.dtype)
+    if dt not in _CARRIER:
+        raise TypeError(f"carrier must be f32/f64, got {dt}")
+    p = dynamic_row_params(exp_bits, man_bits, saturate, ieee_inf, dtype=dt)
+    return apply_row_params(x, p)
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel epilogue: the full runtime row, applied to a store value
+# ---------------------------------------------------------------------------
+#
+# The producing kernels (flash_attention, rwkv6) fuse the dynamic quantize as
+# an epilogue on their output stores, driven by the same (4,) int32 SMEM
+# scalar-prefetch row the standalone quantize kernel uses. The epilogue must
+# be bit-identical to ``ops.quantize_dynamic`` applied to the *stored* value
+# (quantize the value after it has been cast to the output dtype, on an f32
+# carrier), including the fault channel packed into the row's fourth field —
+# so it lives here, next to the quantizer, with no repro.core dependencies
+# (kernels must stay importable before repro.core finishes initializing).
+
+
+def bitflip32(y, fault):
+    """XOR bit ``fault - 1`` into each element's f32 bit pattern; ``fault == 0``
+    is an exact no-op. The in-kernel (f32-only) twin of ``ops._bitflip``."""
+    fault = jnp.asarray(fault, jnp.int32)
+    shift = jnp.maximum(fault - 1, 0)
+    mask = jnp.where(fault > 0,
+                     jnp.left_shift(jnp.asarray(1, jnp.int32), shift),
+                     jnp.asarray(0, jnp.int32))
+    bits = lax.bitcast_convert_type(y, jnp.int32)
+    return lax.bitcast_convert_type(jnp.bitwise_xor(bits, mask), jnp.float32)
+
+
+def quantize_epilogue(y, fmt_ref):
+    """Apply a runtime format row to kernel output ``y`` just before the
+    store: decode ``field3 = ieee_inf | (bit_index + 1) << 1``, quantize the
+    f32 carrier, XOR the armed fault bit, cast back to ``y.dtype``.
+
+    ``fmt_ref`` is indexable as a (4,) int32 vector — an SMEM scalar-prefetch
+    ref inside a Pallas kernel, or a plain array under ``interpret=True``.
+    Bit-identical to ``ops.quantize_dynamic(y, row, impl='ref')`` for any
+    f32-carrier ``y``; the identity row (and any clean row with fault 0)
+    passes values through unchanged, so the fused kernels can always run
+    with the epilogue wired in."""
+    e, m, s, f3 = fmt_ref[0], fmt_ref[1], fmt_ref[2], fmt_ref[3]
+    fault = jnp.right_shift(f3, 1)
+    inf = jnp.bitwise_and(f3, 1)
+    p = dynamic_row_params(e, m, s, inf, fault)
+    return apply_row_params(y.astype(jnp.float32), p).astype(y.dtype)

@@ -22,10 +22,20 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quantize_em import ref as _qref
 
 
-def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
-                *, chunk: int, seq_len: int):
+def _wkv_kernel(*refs, chunk: int, seq_len: int, quantized: bool = False):
+    if quantized:
+        # fused epilogue: (4,) int32 runtime format row via SMEM scalar
+        # prefetch, applied to the per-chunk y stores (the recurrence state
+        # sT is a carry, not a truncation site — it stays exact)
+        (fmt_ref, r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+         y_ref, sT_ref) = refs
+    else:
+        r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref = refs
     hd = r_ref.shape[-1]
     u = u_ref[0].astype(jnp.float32)                       # (hd,)
     nch = seq_len // chunk
@@ -50,7 +60,10 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
 
         y0 = jnp.zeros((chunk, hd), jnp.float32)
         state, y = jax.lax.fori_loop(0, chunk, tok, (state, y0))
-        y_ref[0, c] = y.astype(y_ref.dtype)
+        y = y.astype(y_ref.dtype)
+        if quantized:
+            y = _qref.quantize_epilogue(y, fmt_ref)
+        y_ref[0, c] = y
         return state
 
     state = s0_ref[0].astype(jnp.float32)
@@ -60,9 +73,14 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64,
-                interpret: bool = False):
+                interpret: bool = False, out_fmt=None):
     """r/k/v/w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd) f32.
-    Returns (y (B, H, S, hd) f32, sT (B, H, hd, hd) f32)."""
+    Returns (y (B, H, S, hd) f32, sT (B, H, hd, hd) f32).
+
+    ``out_fmt`` (optional): a (4,) int32 runtime format row; when given, the
+    dynamic quantize is fused into the per-chunk ``y`` stores (scalar
+    prefetch — format swaps are data, zero recompiles). ``sT`` is returned
+    unquantized either way."""
     B, H, S, hd = r.shape
     chunk = min(chunk, S)
     assert S % chunk == 0, (S, chunk)
@@ -75,25 +93,48 @@ def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64,
     s0_r = s0.reshape(B * H, hd, hd)
 
     grid = (B * H,)
-    y, sT = pl.pallas_call(
-        functools.partial(_wkv_kernel, chunk=chunk, seq_len=S),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, hd), lambda i: (i, 0)),
-            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
-            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B * H, nch, chunk, hd), jnp.float32),
-            jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
-        ],
-        interpret=interpret,
-    )(shape4(r), shape4(k), shape4(v), shape4(w), u_r, s0_r)
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, seq_len=S,
+                               quantized=out_fmt is not None)
+    in_blocks = [
+        ((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+        ((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+        ((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+        ((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+        ((1, hd), lambda i: (i, 0)),
+        ((1, hd, hd), lambda i: (i, 0, 0)),
+    ]
+    out_blocks = [
+        ((1, nch, chunk, hd), lambda i: (i, 0, 0, 0)),
+        ((1, hd, hd), lambda i: (i, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B * H, nch, chunk, hd), jnp.float32),
+        jax.ShapeDtypeStruct((B * H, hd, hd), jnp.float32),
+    ]
+    operands = (shape4(r), shape4(k), shape4(v), shape4(w), u_r, s0_r)
+
+    if out_fmt is None:
+        y, sT = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(b, ix) for b, ix in in_blocks],
+            out_specs=[pl.BlockSpec(b, ix) for b, ix in out_blocks],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(*operands)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[pl.BlockSpec(b, lambda i, fmt, ix=ix: ix(i))
+                      for b, ix in in_blocks],
+            out_specs=[pl.BlockSpec(b, lambda i, fmt, ix=ix: ix(i))
+                       for b, ix in out_blocks],
+        )
+        y, sT = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(jnp.asarray(out_fmt, jnp.int32), *operands)
     return y.reshape(B, H, S, hd), sT.reshape(B, H, hd, hd)

@@ -3,15 +3,23 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.quantize_em.ops import quantize_dynamic
 from repro.kernels.rwkv6.kernel import wkv6_pallas
 from repro.kernels.rwkv6.ref import wkv6_ref
 
 
-def wkv6(r, k, v, w, u, s0, *, impl: str = "auto", chunk: int = 64):
+def wkv6(r, k, v, w, u, s0, *, impl: str = "auto", chunk: int = 64,
+         out_fmt=None):
+    """``out_fmt``: optional (4,) int32 runtime format row applied to ``y``
+    (fused in-kernel on the Pallas paths, composed on the ref path)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
-        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk)
+        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, out_fmt=out_fmt)
     if impl == "interpret":
-        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=True)
-    return wkv6_ref(r, k, v, w, u, s0)
+        return wkv6_pallas(r, k, v, w, u, s0, chunk=chunk, interpret=True,
+                           out_fmt=out_fmt)
+    y, sT = wkv6_ref(r, k, v, w, u, s0)
+    if out_fmt is not None:
+        y = quantize_dynamic(y, out_fmt, impl="ref")
+    return y, sT

@@ -103,17 +103,28 @@ class TrajectoryReport:
 
     totals: RaptorReport
     scopes: Tuple[str, ...] = dataclasses.field(
-        metadata=dict(static=True))       # per-location normalized scope path
-    max_rel: Any = None                   # f32[n_steps, n_loc]
-    abs_sum: Any = None                   # f32[n_steps, n_loc] sum |low-shadow|
-    mag_sum: Any = None                   # f32[n_steps, n_loc] sum |shadow|
-    op_counts: Any = None                 # i[n_steps, n_loc]
+        metadata=dict(static=True))       # per-COLUMN normalized scope path
+    max_rel: Any = None                   # f32[n_steps, n_cols]
+    abs_sum: Any = None                   # f32[n_steps, n_cols] sum |low-shadow|
+    mag_sum: Any = None                   # f32[n_steps, n_cols] sum |shadow|
+    op_counts: Any = None                 # i[n_steps, n_cols]
     steps_seen: Any = None                # i32[] outermost-loop trips run
+    # trajectory column -> location id. ``None`` means the identity (one
+    # column per location, the default); a site-filtered profile
+    # (``profile_trajectory(sites=...)``) carries columns for the selected
+    # locations only — their whole-run totals still cover every site.
+    columns: Any = dataclasses.field(default=None, metadata=dict(static=True))
 
     # ---- shape/bookkeeping ------------------------------------------------
     @property
     def locations(self) -> Tuple[str, ...]:
         return self.totals.locations
+
+    def column_locations(self) -> Tuple[int, ...]:
+        """Location id of each trajectory column."""
+        if self.columns is None:
+            return tuple(range(self.n_locations))
+        return tuple(self.columns)
 
     @property
     def n_steps(self) -> int:
@@ -170,7 +181,8 @@ class TrajectoryReport:
             abs_sum=lax.psum(self.abs_sum, axis_name),
             mag_sum=lax.psum(self.mag_sum, axis_name),
             op_counts=lax.psum(self.op_counts, axis_name),
-            steps_seen=lax.pmax(self.steps_seen, axis_name))
+            steps_seen=lax.pmax(self.steps_seen, axis_name),
+            columns=self.columns)
 
     def merge(self, other: "TrajectoryReport") -> "TrajectoryReport":
         """Host-side pairwise reduction (across processes/ranks)."""
@@ -179,6 +191,10 @@ class TrajectoryReport:
                 "TrajectoryReport.merge: step buffers differ "
                 f"({np.shape(self.max_rel)} vs {np.shape(other.max_rel)}); "
                 "profile both shards with the same n_steps")
+        if self.column_locations() != other.column_locations():
+            raise ValueError(
+                "TrajectoryReport.merge: trajectory columns differ; profile "
+                "both shards with the same site selection")
         totals = self.totals.merge(other.totals)  # validates location tables
         return TrajectoryReport(
             totals=totals,
@@ -190,7 +206,8 @@ class TrajectoryReport:
             op_counts=(jnp.asarray(self.op_counts)
                        + jnp.asarray(other.op_counts)),
             steps_seen=jnp.maximum(jnp.asarray(self.steps_seen),
-                                   jnp.asarray(other.steps_seen)))
+                                   jnp.asarray(other.steps_seen)),
+            columns=self.columns)
 
     @staticmethod
     def merge_all(reports: Sequence["TrajectoryReport"]) -> "TrajectoryReport":
@@ -235,23 +252,25 @@ class TrajectoryReport:
         onsets = self.onset_steps(threshold, signal)
         slopes = self.growth_slopes(signal)
         traj = self.rel_traj(signal)
-        peaks = traj.max(axis=0) if traj.size else np.zeros(self.n_locations)
+        peaks = traj.max(axis=0) if traj.size else np.zeros(len(self.scopes))
         flags = np.asarray(jax.device_get(self.totals.flags))
+        cols = self.column_locations()
         per: Dict[str, ScopeBlame] = {}
-        for i, sc in enumerate(self.scopes):
+        for c, sc in enumerate(self.scopes):
+            i = cols[c]                     # the column's location id
             if self.totals.locations[i].startswith("<no truncated"):
                 continue                    # the empty-table sentinel row
             b = per.get(sc)
-            onset = int(onsets[i]) if onsets[i] >= 0 else None
+            onset = int(onsets[c]) if onsets[c] >= 0 else None
             if b is None:
-                per[sc] = ScopeBlame(scope=sc, peak_rel=float(peaks[i]),
-                                     onset=onset, slope=float(slopes[i]),
+                per[sc] = ScopeBlame(scope=sc, peak_rel=float(peaks[c]),
+                                     onset=onset, slope=float(slopes[c]),
                                      flags=int(flags[i]), n_sites=1)
             else:
                 if onset is not None:
                     b.onset = onset if b.onset is None else min(b.onset, onset)
-                b.peak_rel = max(b.peak_rel, float(peaks[i]))
-                b.slope = max(b.slope, float(slopes[i]))
+                b.peak_rel = max(b.peak_rel, float(peaks[c]))
+                b.slope = max(b.slope, float(slopes[c]))
                 b.flags += int(flags[i])
                 b.n_sites += 1
         ranked = sorted(per.values(), key=lambda b: b.sort_key())

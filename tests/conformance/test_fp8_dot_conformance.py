@@ -1,0 +1,77 @@
+"""Bit-level conformance of the native fp8 dot's input quantize.
+
+``kernels/fp8_dot.py`` pre-rounds each dot operand onto the e4m3 grid with
+the repo's quantizer before casting to ``float8_e4m3fn`` storage — because
+XLA's hardware cast double-rounds through bf16 on CPU. This suite pins
+that contract against the independent exact-integer oracle on the entire
+float16 value space, for both fp8 overflow conventions, and verifies the
+storage cast is exact on everything the pre-rounding can produce (every
+finite e4m3 grid value survives the f32 -> fp8 -> f32 round trip
+bit-for-bit; infinities degrade to NaN, the fn-storage behaviour)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  — import order: core before kernels
+from repro.kernels.fp8_dot import (
+    F8_DTYPE, encode_e4m3, fp8_dot_general, quantize_dot_operand,
+)
+from bit_oracle import all_float16_values, oracle_quantize
+from harness import assert_bits_equal
+
+pytestmark = pytest.mark.conformance
+
+
+@pytest.fixture(scope="module")
+def f16_space():
+    return all_float16_values()
+
+
+@pytest.mark.parametrize("saturate", [True, False],
+                         ids=["saturating", "fn-nan"])
+def test_dot_input_quantize_vs_oracle(saturate, f16_space):
+    """The operand pre-rounding agrees with the exact-integer oracle on
+    every float16 bit pattern, both overflow conventions."""
+    got = np.asarray(jax.device_get(
+        quantize_dot_operand(jnp.asarray(f16_space), saturate=saturate)))
+    want = oracle_quantize(f16_space, 4, 3, saturate, False)
+    assert_bits_equal(f"fp8-dot-input-{'sat' if saturate else 'fn'}",
+                      f16_space, got, want, fmt=[4, 3, int(saturate), 0])
+
+
+@pytest.mark.parametrize("saturate", [True, False],
+                         ids=["saturating", "fn-nan"])
+def test_storage_cast_exact_on_grid(saturate, f16_space):
+    """Casting pre-rounded values to fp8 storage and back is the identity
+    on finite values: every e4m3 grid point is exactly representable in
+    bf16 and f32, so any double-rounding inside the cast is harmless. The
+    non-finite lanes (NaN always; +/-inf, which fn storage cannot hold)
+    must come back as NaN."""
+    xq = np.asarray(jax.device_get(
+        quantize_dot_operand(jnp.asarray(f16_space), saturate=saturate)))
+    back = np.asarray(jax.device_get(
+        encode_e4m3(jnp.asarray(xq)).astype(jnp.float32)))
+    finite = np.isfinite(xq)
+    assert_bits_equal(f"fp8-storage-roundtrip-{'sat' if saturate else 'fn'}",
+                      f16_space[finite], back[finite], xq[finite],
+                      fmt=[4, 3, int(saturate), 0])
+    assert np.all(np.isnan(back[~finite]))
+
+
+def test_fp8_dot_matches_emulated_dot():
+    """The native-storage dot equals an f32 dot over identically
+    pre-rounded operands to accumulation-order tolerance (operand values
+    are bit-identical by the tests above; only the contraction differs)."""
+    r = np.random.RandomState(0)
+    a = jnp.asarray(r.randn(128, 64) * 8, jnp.float32)
+    b = jnp.asarray(r.randn(64, 96) * 8, jnp.float32)
+    dn = (((1,), (0,)), ((), ()))
+    nat = fp8_dot_general(a, b, dn)
+    emu = jax.lax.dot_general(quantize_dot_operand(a),
+                              quantize_dot_operand(b), dn,
+                              preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(nat), np.asarray(emu),
+                               rtol=1e-6, atol=1e-4)
+    assert np.asarray(nat).dtype == np.float32

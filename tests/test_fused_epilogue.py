@@ -1,0 +1,178 @@
+"""Bit-exactness of the fused quantize epilogue and its interpreter routing.
+
+The producing kernels (flash_attention, rwkv6) take an optional (4,) int32
+runtime format row and apply the dynamic quantize on their output stores
+(``quantize_em.ref.quantize_epilogue``). The contract everything downstream
+leans on: a fused kernel is bit-for-bit the unfused kernel composed with
+``quantize_dynamic`` on the same row — for every search-ladder rung, both
+overflow conventions, the armed fault channel, and the identity row — on
+the Pallas interpret path (the kernel body as TPU would run it) and on the
+compiled XLA dispatch path. The interpreter's table/policy transform relies
+on this to route a site's row into the epilogue instead of appending a
+separate quantize pass (``kernels/fused.py``)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core  # noqa: F401  — import order: core before kernels
+from repro.core import truncate, TruncationPolicy
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.fused import fused_outputs
+from repro.kernels.quantize_em.ops import (
+    quantize_dynamic, format_row, IDENTITY_ROW,
+)
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ops import wkv6
+
+# every ladder rung the precision search walks, both fp8 overflow
+# conventions, a fault-armed row (bit 31 = sign flip, packed as
+# field3 = ieee_inf | (bit+1) << 1), and the identity row (exact
+# passthrough: fused kernels always run with the epilogue wired in)
+ROWS = [
+    ("e8m15", [8, 15, 0, 1]),
+    ("e8m10", [8, 10, 0, 1]),
+    ("e8m7", [8, 7, 0, 1]),
+    ("e8m5", [8, 5, 0, 1]),
+    ("e8m3", [8, 3, 0, 1]),
+    ("e8m2", [8, 2, 0, 1]),
+    ("e5m2", [5, 2, 0, 1]),
+    ("e4m3s", [4, 3, 1, 0]),
+    ("e4m3fn", [4, 3, 0, 0]),
+    ("e4m3fn+fault31", [4, 3, 0, 64]),
+    ("identity", list(IDENTITY_ROW)),
+]
+ROW_IDS = [n for n, _ in ROWS]
+ROW_VALS = [np.array(r, np.int32) for _, r in ROWS]
+
+
+def _bits(x):
+    return np.asarray(jax.device_get(x)).view(np.uint32)
+
+
+def _flash_args(seed=0):
+    r = np.random.RandomState(seed)
+    q = jnp.asarray(r.randn(1, 2, 128, 32) * 4, jnp.float32)
+    k = jnp.asarray(r.randn(1, 2, 128, 32) * 4, jnp.float32)
+    v = jnp.asarray(r.randn(1, 2, 128, 32) * 4, jnp.float32)
+    return q, k, v
+
+
+def _wkv_args(seed=0):
+    r = np.random.RandomState(seed)
+    B, H, S, hd = 1, 2, 64, 16
+    rr, kk, vv = (jnp.asarray(r.randn(B, H, S, hd), jnp.float32)
+                  for _ in range(3))
+    w = jnp.asarray(1 / (1 + np.exp(-r.randn(B, H, S, hd))), jnp.float32)
+    u = jnp.asarray(r.randn(H, hd) * 0.1, jnp.float32)
+    s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    return rr, kk, vv, w, u, s0
+
+
+@pytest.mark.parametrize("row", ROW_VALS, ids=ROW_IDS)
+def test_flash_fused_interpret_bit_exact(row):
+    """Pallas kernel body (interpret mode): fused epilogue == unfused
+    kernel composed with the ref dynamic quantize, bit for bit."""
+    q, k, v = _flash_args()
+    fused = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True,
+                                   out_fmt=jnp.asarray(row))
+    plain = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+    want = quantize_dynamic(plain, row, impl="ref")
+    np.testing.assert_array_equal(_bits(fused), _bits(want))
+
+
+@pytest.mark.parametrize("row", ROW_VALS, ids=ROW_IDS)
+def test_wkv6_fused_interpret_bit_exact(row):
+    rr, kk, vv, w, u, s0 = _wkv_args()
+    y_f, sT_f = wkv6_pallas(rr, kk, vv, w, u, s0, chunk=32, interpret=True,
+                            out_fmt=jnp.asarray(row))
+    y, sT = wkv6_pallas(rr, kk, vv, w, u, s0, chunk=32, interpret=True)
+    want = quantize_dynamic(y, row, impl="ref")
+    np.testing.assert_array_equal(_bits(y_f), _bits(want))
+    # the recurrence state is NOT covered by the epilogue (an ordinary
+    # site for the interpreter) and must be untouched by the row
+    np.testing.assert_array_equal(_bits(sT_f), _bits(sT))
+
+
+@pytest.mark.parametrize("row", ROW_VALS, ids=ROW_IDS)
+def test_flash_fused_compiled_bit_exact(row):
+    """Compiled dispatch path: one jitted executable carrying the epilogue
+    vs the unfused kernel + a separate quantize dispatch."""
+    q, k, v = _flash_args(1)
+    fused = jax.jit(lambda a, b, c, fr: flash_attention(
+        a, b, c, causal=True, out_fmt=fr))(q, k, v, jnp.asarray(row))
+    plain = jax.jit(lambda a, b, c: flash_attention(
+        a, b, c, causal=True))(q, k, v)
+    want = jax.jit(lambda y, fr: quantize_dynamic(y, fr, impl="ref"))(
+        plain, jnp.asarray(row))
+    np.testing.assert_array_equal(_bits(fused), _bits(want))
+
+
+@pytest.mark.parametrize("row", ROW_VALS, ids=ROW_IDS)
+def test_wkv6_fused_compiled_bit_exact(row):
+    rr, kk, vv, w, u, s0 = _wkv_args(1)
+    fused = jax.jit(lambda fr: wkv6(rr, kk, vv, w, u, s0,
+                                    out_fmt=fr)[0])(jnp.asarray(row))
+    plain = jax.jit(lambda: wkv6(rr, kk, vv, w, u, s0)[0])()
+    want = quantize_dynamic(plain, row, impl="ref")
+    np.testing.assert_array_equal(_bits(fused), _bits(want))
+
+
+def test_fused_recognition_and_policy_routing():
+    """The interpreter recognizes an epilogue-bearing pallas_call and routes
+    a policy rule's format row into it; the routed result is bit-identical
+    to quantizing the unfused kernel output with the same rule."""
+    q, k, v = _flash_args(2)
+
+    def fn(q, k, v):
+        return flash_attention_pallas(
+            q, k, v, causal=True, block_q=64, block_k=64, interpret=True,
+            out_fmt=jnp.asarray(IDENTITY_ROW))
+
+    def pallas_eqns(jx):
+        out = []
+        for e in jx.eqns:
+            if e.primitive.name == "pallas_call":
+                out.append(e)
+            for p in e.params.values():
+                if hasattr(p, "jaxpr"):
+                    out += pallas_eqns(p.jaxpr)
+        return out
+
+    eqns = pallas_eqns(jax.make_jaxpr(fn)(q, k, v).jaxpr)
+    assert len(eqns) == 1
+    assert fused_outputs(eqns[0]) == (0,)
+
+    pol = TruncationPolicy.everywhere("e8m3")
+    routed = truncate(fn, pol, impl="interpret")(q, k, v)
+    plain = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                   block_k=64, interpret=True)
+    want = quantize_dynamic(plain, format_row("e8m3"), impl="ref")
+    np.testing.assert_array_equal(_bits(routed), _bits(want))
+
+
+def test_native_fp8_truncate_matches_emulated():
+    """``truncate(..., native_fp8=True)`` executes quantize_dot_inputs
+    sites on fp8 storage; for finite operands the pre-rounding is the bit
+    oracle's, so the result matches the emulated path to f32 dot accuracy
+    (identical operand values, possibly different accumulation order)."""
+    from repro.core import TruncationRule, E4M3
+
+    r = np.random.RandomState(3)
+    a = jnp.asarray(r.randn(64, 32), jnp.float32)
+    b = jnp.asarray(r.randn(32, 48), jnp.float32)
+    rule = TruncationRule(fmt=E4M3, scope="*", ops=("dot_general",),
+                          quantize_dot_inputs=True)
+    pol = TruncationPolicy(rules=(rule,))
+
+    def f(a, b):
+        return a @ b
+
+    emu = truncate(f, pol, impl="ref")(a, b)
+    nat = truncate(f, pol, impl="ref", native_fp8=True)(a, b)
+    np.testing.assert_allclose(np.asarray(nat), np.asarray(emu),
+                               rtol=1e-6, atol=1e-5)
