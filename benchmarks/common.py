@@ -15,10 +15,11 @@ from repro.models import Model
 def bench_model(seed: int = 0, **overrides):
     """A ~10M-param GPT-style model: large enough that truncation effects
     are measurable, small enough for CPU sweeps."""
-    cfg = ArchConfig(name="bench", family="dense", n_layers=4, d_model=128,
-                     n_heads=8, n_kv_heads=4, d_ff=512, vocab=512,
-                     dtype="float32", remat=False, scan_layers=False,
-                     **overrides)
+    kw = dict(name="bench", family="dense", n_layers=4, d_model=128,
+              n_heads=8, n_kv_heads=4, d_ff=512, vocab=512,
+              dtype="float32", remat=False, scan_layers=False)
+    kw.update(overrides)
+    cfg = ArchConfig(**kw)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     return cfg, model, params

@@ -88,6 +88,14 @@ GATED = {
         # trajectory is visible in the uploaded artifacts.
         "continuous_over_aligned_speedup": "higher",
     },
+    "static_prune": {
+        # eval-count ratio of the unpruned over the statically-pruned
+        # autosearch on the bf16 Sod tube: pure counter arithmetic (the
+        # benchmark asserts the assignments are bit-identical), so it is
+        # deterministic and machine-independent and gates raw. The wall
+        # rows stay ungated (compile-dominated on CI runners).
+        "autosearch_evals_pruned_ratio": "higher",
+    },
     "instability_profile": {
         # the paired-eval interpreter paths this repo owns: plain shadow
         # execution and the tentpole's per-step trajectory accumulation.
@@ -113,6 +121,7 @@ RATIO_ROWS = {
     ("kernels_micro", "wkv6_fused_speedup"),
     ("serving_throughput", "continuous_over_aligned_speedup"),
     ("instability_profile", "heat_trajectory_overhead"),
+    ("static_prune", "autosearch_evals_pruned_ratio"),
     ("perf_fp8_dot", "fp8_dot_native_speedup"),
     ("perf_fp8_dot", "fp8_dot_measured_vs_modeled"),
 }

@@ -48,6 +48,19 @@ def fresh_artifact():
     return res.to_artifact("bench_model")
 
 
+def _model_scope_paths():
+    """The bench model's current enumerable scope frontier — what the
+    committed artifact's assignments are linted for drift against."""
+    import jax
+
+    from benchmarks.common import bench_model, bench_batch
+    from repro.search.scopes import discover_scopes
+
+    cfg, model, params = bench_model()
+    closed = jax.make_jaxpr(model.loss)(params, bench_batch(cfg))
+    return [s.path for s in discover_scopes(closed)]
+
+
 def _assignment_rows(artifact):
     """{scope: (man_bits_or_None, excluded)} — the gated surface."""
     return {path: (None if row.man_bits is None else int(row.man_bits),
@@ -111,6 +124,22 @@ def main(argv=None) -> int:
             print(f"committed artifact {args.committed} is not readable by "
                   f"this build:\n  {e}\n"
                   f"if the schema bump is intended, refresh + commit:\n"
+                  f"  PYTHONPATH=src python -m benchmarks.policy_drift"
+                  f" --refresh", file=sys.stderr)
+            return 1
+
+    if committed is not None:
+        # lint the committed artifact before the expensive search: a policy
+        # that cannot be what deployment thinks it is (dead/shadowed rules,
+        # scopes that drifted off the current model) fails in seconds
+        from repro.analysis.lint import lint_artifact
+        findings = lint_artifact(committed, scopes=_model_scope_paths())
+        for f in findings:
+            print(f"  lint: {f.render()}",
+                  file=sys.stderr if f.level == "error" else sys.stdout)
+        if any(f.level == "error" for f in findings):
+            print(f"policy-drift FAILED: committed artifact "
+                  f"{args.committed} fails lint; refresh + commit:\n"
                   f"  PYTHONPATH=src python -m benchmarks.policy_drift"
                   f" --refresh", file=sys.stderr)
             return 1

@@ -75,12 +75,13 @@ def main() -> int:
         fig7_truncation_sweep, table2_memmode, table3_overhead,
         fig8_speedup_model, kernels_micro, perf_fp8_dot, roofline_table,
         search_convergence, apps_e2e, instability_profile,
-        serving_throughput,
+        serving_throughput, static_prune,
     )
     benches = [
         ("apps_e2e", apps_e2e.run),
         ("instability_profile", instability_profile.run),
         ("serving_throughput", serving_throughput.run),
+        ("static_prune", static_prune.run),
         ("fig7_truncation_sweep", fig7_truncation_sweep.run),
         ("table2_memmode", table2_memmode.run),
         ("table3_overhead", table3_overhead.run),

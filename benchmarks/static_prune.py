@@ -1,0 +1,93 @@
+"""Static-pruning benchmark: abstract interpretation vs dynamic probing.
+
+``autosearch(static_prune=True)`` runs the jaxpr range/exactness analysis
+before probing and skips every rung it can decide statically. The contract
+is *bit-identical assignments for strictly less work*, so this benchmark:
+
+  * runs the unpruned and pruned searches on the bf16 Sod shock tube and
+    ASSERTS the per-scope assignments match exactly,
+  * emits the eval and dispatch reduction ratios as gated rows —
+    dimensionless counter arithmetic (no wall clocks), deterministic and
+    machine-independent, so they gate raw (RATIO_ROWS in compare.py),
+  * times the analysis itself (ungated: a few ms of pure-Python abstract
+    interpretation; the trajectory is visible in uploaded artifacts).
+
+    PYTHONPATH=src python -m benchmarks.static_prune
+"""
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.apps import get_app
+
+BUDGET = 64
+
+
+def _run(app, state, **kw):
+    from repro.search import driver
+    return driver.autosearch(app.run_observables, (state,),
+                             app.error_metric, BUDGET,
+                             threshold=app.search_threshold, **kw)
+
+
+def run():
+    app = get_app("sod")
+    state = app.init_state(jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    base = _run(app, state)
+    base_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    pruned = _run(app, state, static_prune=True)
+    pruned_wall = time.perf_counter() - t0
+
+    table = lambda r: {p: (a.man_bits, a.excluded)
+                       for p, a in r.assignments.items()}
+    assert table(pruned) == table(base), (
+        "static pruning changed the search result:\n"
+        f"  base   {table(base)}\n  pruned {table(pruned)}")
+    assert pruned.evals_used < base.evals_used
+    assert pruned.n_dispatches < base.n_dispatches
+
+    # standalone analysis wall time (trace + abstract interpretation +
+    # verdicts), measured apart from the search
+    import jax
+
+    from repro.analysis import analyze_closed, scope_rung_verdicts
+    from repro.core import interpreter
+    from repro.core.formats import FPFormat
+    from repro.core.policy import TruncationPolicy, TruncationRule
+    from repro.search.scopes import discover_scopes
+
+    closed = jax.make_jaxpr(app.run_observables)(state)
+    leaves = jax.tree_util.tree_leaves(((state,), {}))
+    t0 = time.perf_counter()
+    res = analyze_closed(closed, leaves)
+    paths = [s.path for s in discover_scopes(closed)]
+    index = interpreter.enumerate_sites(closed, TruncationPolicy(rules=(
+        TruncationRule(fmt=FPFormat(8, 0), scope="**"),)))
+    sv = scope_rung_verdicts(res, index, paths, [15, 10, 7, 5, 3, 2], 8)
+    analysis_wall = time.perf_counter() - t0
+
+    evals_ratio = base.evals_used / pruned.evals_used
+    disp_ratio = base.n_dispatches / pruned.n_dispatches
+    csv_row("autosearch_unpruned_wall", base_wall * 1e6,
+            f"evals={base.evals_used};dispatches={base.n_dispatches}")
+    csv_row("autosearch_pruned_wall", pruned_wall * 1e6,
+            f"evals={pruned.evals_used};dispatches={pruned.n_dispatches};"
+            f"rungs_decided={pruned.n_pruned}")
+    # gated, dimensionless: the search must keep skipping work statically
+    csv_row("autosearch_evals_pruned_ratio", evals_ratio,
+            f"base={base.evals_used};pruned={pruned.evals_used}")
+    csv_row("autosearch_dispatch_pruned_ratio", disp_ratio,
+            f"base={base.n_dispatches};pruned={pruned.n_dispatches}")
+    csv_row("static_analysis_wall", analysis_wall * 1e6,
+            f"sites={len(index)};records={len(res.records)};"
+            f"decided={sv.n_decided}")
+    return evals_ratio
+
+
+if __name__ == "__main__":
+    run()

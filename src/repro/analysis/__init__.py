@@ -1,0 +1,24 @@
+"""Static numerical analysis: abstract interpretation of closed jaxprs
+(range/exactness facts, overflow criticality), per-rung search verdicts,
+and the policy/artifact linter."""
+from repro.analysis.domain import (
+    AbsVal, carrier_format, from_concrete, join, leq, of_aval, seal,
+    top_for_dtype, transfer,
+)
+from repro.analysis.interp import AnalysisResult, DotInputs, analyze_closed
+from repro.analysis.verdicts import (
+    StaticVerdicts, Verdict, exact_in, overflow_certain,
+    rne_overflow_boundary, scope_rung_verdicts, universally_exact,
+)
+from repro.analysis.lint import (
+    ArtifactLintError, Finding, lint_artifact, lint_policy,
+)
+
+__all__ = [
+    "AbsVal", "AnalysisResult", "ArtifactLintError", "DotInputs",
+    "Finding", "StaticVerdicts", "Verdict", "analyze_closed",
+    "carrier_format", "exact_in", "from_concrete", "join", "leq",
+    "lint_artifact", "lint_policy", "of_aval", "overflow_certain",
+    "rne_overflow_boundary", "scope_rung_verdicts", "seal",
+    "top_for_dtype", "transfer", "universally_exact",
+]

@@ -1,0 +1,467 @@
+"""Abstract interpretation of closed jaxprs over the :mod:`domain` lattice.
+
+``analyze_closed`` mirrors the structural walk of
+``repro.core.interpreter`` — same higher-order-primitive handling, same
+``(id(jaxpr), eqn_idx, out_idx, name_stack)`` record keys as ``SiteIndex``
+— but evaluates every equation abstractly with :func:`domain.transfer`.
+``scan``/``while`` carries run to a join fixpoint (``acc' = acc ⊔
+body(acc)``) with widening to the carrier top after ``warm_iters``
+non-converging rounds; carrier tops are post-fixpoints by construction
+(every transfer seals its result at or below the carrier top), so one
+more body pass after widening yields sound ``ys`` and per-site records.
+``cond`` joins the branch outputs elementwise.
+
+Records are accumulated with joins across every visit of a site (scan
+fixpoint rounds, shared sub-jaxprs reached under several prefixes), which
+only widens them; the final post-fixpoint pass guarantees each record
+over-approximates every concrete execution of its site.
+
+A second, backward pass computes *criticality*: a site is critical when a
+non-finite value at its output provably propagates to some top-level
+output (through primitives that preserve non-finiteness). Criticality is
+what licenses the ``OVERFLOW_CERTAIN`` verdict to prune a rung — the
+overflow must be observable in the search metric, not absorbed by a
+``select``/``min``/``exp`` downstream. ``while`` bodies and ``cond``
+branches never yield critical sites (an unexecuted branch makes the
+quantize a no-op); scan bodies use a least-fixpoint over carry
+criticality, sound because an overflow-certain site fires at *every*
+step (its ``lo`` bound holds per-step), in particular the last.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax._src import core as jcore
+
+from repro.core.policy import join_stack
+from repro.analysis.domain import (
+    AbsVal, from_concrete, join, leq, of_aval, transfer,
+)
+
+RecordKey = Tuple[int, int, int, str]
+
+_HOP_NAMES = frozenset({
+    "jit", "pjit", "closed_call", "core_call", "scan", "while", "cond",
+    "remat2", "checkpoint", "custom_jvp_call", "custom_vjp_call",
+    "custom_vjp_call_jaxpr",
+})
+
+_DOT_PRIMS = frozenset({"dot_general", "conv_general_dilated", "ragged_dot"})
+
+
+@dataclasses.dataclass
+class DotInputs:
+    """Abstract operands of a dot-like site (for accumulator-risk lint)."""
+    lhs: AbsVal
+    rhs: AbsVal
+    n: int  # contraction size
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    records: Dict[RecordKey, AbsVal]
+    critical: Dict[RecordKey, bool]
+    dot_inputs: Dict[RecordKey, DotInputs]
+    out_vals: List[AbsVal]
+    n_widened: int
+    pinned: List[Any]
+
+    @property
+    def outputs_finite(self) -> bool:
+        return all(v.finite for v in self.out_vals)
+
+    def value_at(self, key: RecordKey) -> Optional[AbsVal]:
+        return self.records.get(key)
+
+    def critical_at(self, key: RecordKey) -> bool:
+        return self.critical.get(key, False)
+
+
+def _closed(eqn_param: Any) -> jcore.ClosedJaxpr:
+    if isinstance(eqn_param, jcore.ClosedJaxpr):
+        return eqn_param
+    return jcore.ClosedJaxpr(eqn_param, ())
+
+
+def _is_float(aval: Any) -> bool:
+    return (hasattr(aval, "dtype")
+            and jnp.issubdtype(aval.dtype, jnp.floating))
+
+
+class _State:
+    def __init__(self, warm_iters: int) -> None:
+        self.records: Dict[RecordKey, AbsVal] = {}
+        self.critical: Dict[RecordKey, bool] = {}
+        self.dot_inputs: Dict[RecordKey, DotInputs] = {}
+        self.n_widened = 0
+        self.warm_iters = warm_iters
+        self.pinned: List[Any] = []
+        self._const_memo: Dict[int, Tuple[Any, AbsVal]] = {}
+
+    def abs_const(self, c: Any) -> AbsVal:
+        ent = self._const_memo.get(id(c))
+        if ent is not None and ent[0] is c:
+            return ent[1]
+        v = from_concrete(c)
+        self._const_memo[id(c)] = (c, v)  # pin c so its id stays valid
+        return v
+
+    def record(self, key: RecordKey, val: AbsVal) -> None:
+        prev = self.records.get(key)
+        self.records[key] = val if prev is None else join(prev, val)
+
+    def record_dot(self, key: RecordKey, d: DotInputs) -> None:
+        prev = self.dot_inputs.get(key)
+        if prev is None:
+            self.dot_inputs[key] = d
+        else:
+            self.dot_inputs[key] = DotInputs(join(prev.lhs, d.lhs),
+                                             join(prev.rhs, d.rhs),
+                                             max(prev.n, d.n))
+
+
+# --------------------------------------------------------------------------
+# forward pass
+# --------------------------------------------------------------------------
+
+def _contraction_size(eqn: Any) -> int:
+    try:
+        if eqn.primitive.name == "dot_general":
+            (lhs_c, _), _ = eqn.params["dimension_numbers"]
+            shape = eqn.invars[0].aval.shape
+            n = 1
+            for d in lhs_c:
+                n *= int(shape[d])
+            return max(n, 1)
+        n = 1
+        for d in eqn.invars[1].aval.shape:
+            n *= int(d)
+        return max(n, 1)
+    except Exception:
+        return 1
+
+
+def _aeval(st: _State, jaxpr: jcore.Jaxpr, consts: Sequence[AbsVal],
+           args: Sequence[AbsVal], prefix: str) -> List[AbsVal]:
+    st.pinned.append(jaxpr)
+    env: Dict[Any, AbsVal] = {}
+
+    def read(v: Any) -> AbsVal:
+        if isinstance(v, jcore.Literal):
+            return st.abs_const(v.val)
+        return env.get(v, of_aval(v.aval))
+
+    for v, val in zip(jaxpr.constvars, consts):
+        env[v] = val
+    for v, val in zip(jaxpr.invars, args):
+        env[v] = val
+
+    for eqn_idx, eqn in enumerate(jaxpr.eqns):
+        invals = [read(v) for v in eqn.invars]
+        pname = eqn.primitive.name
+        name_stack = join_stack(prefix, str(eqn.source_info.name_stack))
+        handler = _A_HOPS.get(pname)
+        if handler is not None:
+            outvals = handler(st, eqn, invals, name_stack)
+        else:
+            outvals = transfer(eqn, invals)
+            for out_idx, var in enumerate(eqn.outvars):
+                if _is_float(var.aval):
+                    key = (id(jaxpr), eqn_idx, out_idx, name_stack)
+                    st.record(key, outvals[out_idx])
+                    if pname in _DOT_PRIMS and out_idx == 0:
+                        st.record_dot(key, DotInputs(
+                            invals[0], invals[1], _contraction_size(eqn)))
+        for var, val in zip(eqn.outvars, outvals):
+            env[var] = val
+
+    return [read(v) for v in jaxpr.outvars]
+
+
+def _a_call(st: _State, eqn: Any, invals: List[AbsVal],
+            prefix: str) -> List[AbsVal]:
+    key = "call_jaxpr" if "call_jaxpr" in eqn.params else "jaxpr"
+    closed = _closed(eqn.params[key])
+    cvals = [st.abs_const(c) for c in closed.consts]
+    return _aeval(st, closed.jaxpr, cvals, invals, prefix)
+
+
+def _carry_fixpoint(st: _State, body: jcore.ClosedJaxpr,
+                    body_consts: List[AbsVal], carry_in: List[AbsVal],
+                    extra: List[AbsVal], ncarry: int,
+                    prefix: str) -> Tuple[List[AbsVal], List[AbsVal]]:
+    """Join-fixpoint over a loop carry; returns (carry_acc, final_res).
+
+    ``final_res`` is one body evaluation under the converged/widened
+    accumulator, so its ys and record joins over-approximate every step."""
+    cvals = [st.abs_const(c) for c in body.consts]
+    acc = list(carry_in)
+    converged = False
+    for _ in range(max(st.warm_iters, 1)):
+        res = _aeval(st, body.jaxpr, cvals, body_consts + acc + extra,
+                     prefix)
+        new = [join(a, r) for a, r in zip(acc, res[:ncarry])]
+        if all(leq(n, a) for n, a in zip(new, acc)):
+            acc = new
+            converged = True
+            break
+        acc = new
+    if not converged:
+        st.n_widened += 1
+        carry_vars = body.jaxpr.invars[len(body_consts):
+                                       len(body_consts) + ncarry]
+        acc = [of_aval(v.aval) for v in carry_vars]
+    final = _aeval(st, body.jaxpr, cvals, body_consts + acc + extra, prefix)
+    return acc, final
+
+
+def _a_scan(st: _State, eqn: Any, invals: List[AbsVal],
+            prefix: str) -> List[AbsVal]:
+    p = eqn.params
+    body = _closed(p["jaxpr"])
+    nc, ncarry = p["num_consts"], p["num_carry"]
+    consts = invals[:nc]
+    carry_in = invals[nc:nc + ncarry]
+    xs = [v.drop_lo() for v in invals[nc + ncarry:]]
+    if p.get("length") == 0:
+        return list(carry_in) + [of_aval(v.aval)
+                                 for v in eqn.outvars[ncarry:]]
+    acc, final = _carry_fixpoint(st, body, consts, list(carry_in), xs,
+                                 ncarry, prefix)
+    if p.get("length") is None:
+        # unknown trip count: a zero-trip scan passes the carry through
+        acc = [join(a, c) for a, c in zip(acc, carry_in)]
+    return acc + [v.drop_lo() for v in final[ncarry:]]
+
+
+def _a_while(st: _State, eqn: Any, invals: List[AbsVal],
+             prefix: str) -> List[AbsVal]:
+    p = eqn.params
+    cond_closed = _closed(p["cond_jaxpr"])
+    body_closed = _closed(p["body_jaxpr"])
+    cn, bn = p["cond_nconsts"], p["body_nconsts"]
+    cond_consts = invals[:cn]
+    body_consts = invals[cn:cn + bn]
+    carry_in = list(invals[cn + bn:])
+    acc, _ = _carry_fixpoint(st, body_closed, body_consts, carry_in,
+                             [], len(carry_in), prefix)
+    # the cond jaxpr's sites see every iterate: evaluate it under acc
+    cvals = [st.abs_const(c) for c in cond_closed.consts]
+    _aeval(st, cond_closed.jaxpr, cvals, cond_consts + acc, prefix)
+    # acc joins carry_in, so the zero-iteration case is covered
+    return acc
+
+
+def _a_cond(st: _State, eqn: Any, invals: List[AbsVal],
+            prefix: str) -> List[AbsVal]:
+    branches = eqn.params["branches"]
+    operands = invals[1:]
+    outs: Optional[List[AbsVal]] = None
+    for br in branches:
+        closed = _closed(br)
+        cvals = [st.abs_const(c) for c in closed.consts]
+        res = _aeval(st, closed.jaxpr, cvals, operands, prefix)
+        outs = res if outs is None else [join(a, b)
+                                         for a, b in zip(outs, res)]
+    assert outs is not None
+    return outs
+
+
+_A_HOPS = {
+    "jit": _a_call,
+    "pjit": _a_call,
+    "closed_call": _a_call,
+    "core_call": _a_call,
+    "scan": _a_scan,
+    "while": _a_while,
+    "cond": _a_cond,
+    "remat2": _a_call,
+    "checkpoint": _a_call,
+    "custom_jvp_call": _a_call,
+    "custom_vjp_call": _a_call,
+    "custom_vjp_call_jaxpr": _a_call,
+}
+
+
+# --------------------------------------------------------------------------
+# backward pass: non-finite propagation (criticality)
+# --------------------------------------------------------------------------
+
+# primitives where a non-finite element in any operand position listed
+# produces a non-finite element in the (single) output
+_PRESERVE_ALL = frozenset({
+    "add", "sub", "mul", "dot_general", "conv_general_dilated",
+    "ragged_dot", "concatenate",
+})
+_PRESERVE_FIRST = frozenset({
+    "neg", "abs", "log", "sqrt", "reduce_sum", "reduce_prod", "cumsum",
+    "reshape", "transpose", "broadcast_in_dim", "broadcast", "rev",
+    "squeeze", "expand_dims", "copy", "stop_gradient", "real",
+    "device_put", "optimization_barrier", "sharding_constraint",
+})
+
+
+def _preserve_positions(eqn: Any) -> List[int]:
+    """Operand positions whose non-finite elements provably survive into
+    the output. Conservative: unknown primitives propagate nothing."""
+    pname = eqn.primitive.name
+    if len(eqn.outvars) != 1:
+        return []
+    out_aval = eqn.outvars[0].aval
+    if not _is_float(out_aval):
+        return []
+    if pname in _PRESERVE_ALL:
+        return list(range(len(eqn.invars)))
+    if pname in _PRESERVE_FIRST:
+        return [0]
+    if pname == "div":
+        return [0]  # a / inf == 0: the denominator does not preserve
+    if pname == "integer_pow":
+        return [0] if int(eqn.params.get("y", 0)) > 0 else []
+    if pname == "convert_element_type":
+        in_aval = eqn.invars[0].aval
+        if _is_float(in_aval):
+            return [0]
+        return []
+    if pname == "pad":
+        cfg = eqn.params.get("padding_config", ())
+        if all(lo >= 0 and hi >= 0 for lo, hi, _ in cfg):
+            return [0]  # no cropping: every operand element survives
+        return []
+    if pname == "scatter-add":
+        return [0]
+    return []
+
+
+def _mark(st: _State, jaxpr: jcore.Jaxpr, prefix: str,
+          out_crit: Sequence[bool], live: bool) -> List[bool]:
+    crit: Dict[Any, bool] = {}
+
+    def get(v: Any) -> bool:
+        return (not isinstance(v, jcore.Literal)) and crit.get(v, False)
+
+    def setv(v: Any, c: bool) -> None:
+        if c and not isinstance(v, jcore.Literal):
+            crit[v] = True
+
+    for v, c in zip(jaxpr.outvars, out_crit):
+        setv(v, c)
+
+    for eqn_idx in reversed(range(len(jaxpr.eqns))):
+        eqn = jaxpr.eqns[eqn_idx]
+        pname = eqn.primitive.name
+        name_stack = join_stack(prefix, str(eqn.source_info.name_stack))
+        ocrit = [get(v) for v in eqn.outvars]
+        if pname in _HOP_NAMES:
+            icrit = _mark_hop(st, eqn, name_stack, ocrit, live)
+            for v, c in zip(eqn.invars, icrit):
+                setv(v, c)
+            continue
+        for out_idx, var in enumerate(eqn.outvars):
+            key = (id(jaxpr), eqn_idx, out_idx, name_stack)
+            if key in st.records and ocrit[out_idx] and live:
+                st.critical[key] = True
+        if any(ocrit):
+            for i in _preserve_positions(eqn):
+                if i < len(eqn.invars):
+                    setv(eqn.invars[i], True)
+
+    return [get(v) for v in jaxpr.invars]
+
+
+def _mark_hop(st: _State, eqn: Any, prefix: str, ocrit: List[bool],
+              live: bool) -> List[bool]:
+    pname = eqn.primitive.name
+    p = eqn.params
+    if pname == "while":
+        # trip count unknown: nothing inside is guaranteed to reach output
+        return [False] * len(eqn.invars)
+    if pname == "cond":
+        branches = p["branches"]
+        agg: Optional[List[bool]] = None
+        for br in branches:
+            closed = _closed(br)
+            # live=False: an unexecuted branch makes its quantizes no-ops,
+            # so branch-internal sites can never be overflow-pruned
+            inv = _mark(st, closed.jaxpr, prefix, ocrit, False)
+            agg = inv if agg is None else [a and b
+                                           for a, b in zip(agg, inv)]
+        assert agg is not None
+        return [False] + agg
+    if pname == "scan":
+        return _mark_scan(st, eqn, prefix, ocrit, live)
+    key = "call_jaxpr" if "call_jaxpr" in p else "jaxpr"
+    closed = _closed(p[key])
+    return _mark(st, closed.jaxpr, prefix, ocrit, live)
+
+
+def _mark_scan(st: _State, eqn: Any, prefix: str, ocrit: List[bool],
+               live: bool) -> List[bool]:
+    p = eqn.params
+    body = _closed(p["jaxpr"])
+    nc, ncarry = p["num_consts"], p["num_carry"]
+    eqn_carry_crit = list(ocrit[:ncarry])
+    ys_crit = list(ocrit[ncarry:])
+    # A_carry[i]: non-finite in carry_i at the start of ANY step reaches a
+    # critical top-level output. Least fixpoint from below; a carry output
+    # position is critical only when it is BOTH eqn-critical (covers the
+    # last step, whose carry-out is the eqn output) AND in A (covers every
+    # earlier step, whose carry-out feeds the next step). Incremental site
+    # marking across rounds is sound: out_crit only grows, so the final
+    # round's marks dominate all earlier ones.
+    a_carry = [False] * ncarry
+    inv: List[bool] = [False] * len(body.jaxpr.invars)
+    for _ in range(ncarry + 1):
+        body_out_crit = ([a and e for a, e in zip(a_carry, eqn_carry_crit)]
+                        + ys_crit)
+        inv = _mark(st, body.jaxpr, prefix, body_out_crit, live)
+        new_a = [a or c for a, c in zip(a_carry, inv[nc:nc + ncarry])]
+        if new_a == a_carry:
+            break
+        a_carry = new_a
+    const_crit = inv[:nc]
+    xs_crit = inv[nc + ncarry:]
+    if p.get("length") == 0:
+        carry_crit = eqn_carry_crit
+        const_crit = [False] * nc
+        xs_crit = [False] * len(xs_crit)
+    else:
+        carry_crit = [a and e for a, e in zip(a_carry, eqn_carry_crit)] \
+            if p.get("length") is None else a_carry
+    return const_crit + carry_crit + xs_crit
+
+
+# --------------------------------------------------------------------------
+# entry point
+# --------------------------------------------------------------------------
+
+def analyze_closed(closed: jcore.ClosedJaxpr,
+                   inputs: Optional[Sequence[Any]] = None, *,
+                   warm_iters: int = 3) -> AnalysisResult:
+    """Run the forward range/exactness pass and the backward criticality
+    pass over ``closed``.
+
+    ``inputs``: one entry per ``closed.jaxpr.invars`` — an :class:`AbsVal`,
+    or a concrete array to calibrate from (abstracted exactly via
+    ``from_concrete``). ``None`` analyzes from dtype tops (range facts then
+    come only from constants and structure)."""
+    st = _State(warm_iters)
+    st.pinned.append(closed)
+    jaxpr = closed.jaxpr
+    if inputs is None:
+        args = [of_aval(v.aval) for v in jaxpr.invars]
+    else:
+        if len(inputs) != len(jaxpr.invars):
+            raise ValueError(
+                f"analyze_closed: got {len(inputs)} inputs for "
+                f"{len(jaxpr.invars)} invars")
+        args = [x if isinstance(x, AbsVal) else from_concrete(x)
+                for x in inputs]
+    consts = [st.abs_const(c) for c in closed.consts]
+    out_vals = _aeval(st, jaxpr, consts, args, "")
+    _mark(st, jaxpr, "", [True] * len(jaxpr.outvars), True)
+    return AnalysisResult(records=st.records, critical=st.critical,
+                          dot_inputs=st.dot_inputs, out_vals=out_vals,
+                          n_widened=st.n_widened, pinned=st.pinned)

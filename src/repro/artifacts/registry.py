@@ -142,7 +142,14 @@ class Registry:
     # ---- save / load -------------------------------------------------------
     def save(self, artifact: PolicyArtifact,
              name: Optional[str] = None) -> ArtifactRef:
-        """Publish a new version atomically; returns its durable ref."""
+        """Publish a new version atomically; returns its durable ref.
+
+        Every artifact is linted before publication
+        (:func:`repro.analysis.lint.lint_artifact`): error-level findings
+        raise :class:`repro.analysis.lint.ArtifactLintError` and block the
+        save; warnings are recorded in the published artifact's provenance
+        under ``"lint_warnings"``."""
+        artifact = self._lint(artifact)
         name = name or artifact.name
         if not _NAME_RE.match(name or ""):
             raise ValueError(f"bad artifact name {name!r}")
@@ -164,6 +171,22 @@ class Registry:
         self._gc(name)
         return ArtifactRef(name=name, version=version,
                            digest=artifact.digest)
+
+    @staticmethod
+    def _lint(artifact: PolicyArtifact) -> PolicyArtifact:
+        """Structural lint gate for publication. Clean artifacts pass
+        through untouched (identical bytes, identical digest); warning
+        findings are stamped into provenance so the published version
+        carries its own lint report."""
+        from repro.analysis.lint import ArtifactLintError, lint_artifact
+        findings = lint_artifact(artifact)
+        if any(f.level == "error" for f in findings):
+            raise ArtifactLintError(findings)
+        if findings:
+            prov = dict(artifact.provenance)
+            prov["lint_warnings"] = [f.render() for f in findings]
+            artifact = dataclasses.replace(artifact, provenance=prov)
+        return artifact
 
     def _publish_in_flight(self, name: str) -> bool:
         """True if the name dir shows a concurrent publisher's torn window:

@@ -342,6 +342,16 @@ class SiteIndex:
         """The (num_sites, 4) table that quantizes nothing."""
         return np.tile(IDENTITY_ROW, (len(self.sites), 1))
 
+    def site_keys(self) -> List[Tuple]:
+        """Per-site lookup keys, in site order — the inverse of the
+        ``(id(jaxpr), eqn_idx, out_idx, name_stack) -> row`` mapping.
+        Lets analyses built over the same jaxpr forest (``repro.analysis``)
+        address their per-value records by site."""
+        keys: List = [None] * len(self.sites)
+        for k, i in self._by_key.items():
+            keys[i] = k
+        return keys
+
     def table_for(self, policy: TruncationPolicy) -> np.ndarray:
         """Lower a candidate policy to its (num_sites, 4) int32 format table.
 

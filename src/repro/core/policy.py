@@ -14,8 +14,10 @@ Mirrors RAPTOR's configuration surface:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import re
-from typing import Callable, Optional, Sequence, Tuple
+import weakref
+from typing import Any, Callable, ClassVar, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -115,6 +117,37 @@ def magnitude_above(threshold: float) -> MaskFn:
     return fn
 
 
+# process-unique, never-reused tokens for mask callables. ``id(mask)`` is NOT
+# a stable identity: CPython reuses addresses as soon as the object is
+# collected, so a cache key built on a dead mask's id would alias a later,
+# different mask and poison every trace cache keyed on policies (the cached
+# executable quantizes with the *old* predicate). Tokens are handed out once
+# per live object and the WeakKeyDictionary forgets them only when the mask
+# itself dies — after which the token number is never issued again.
+_MASK_TOKENS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_MASK_PINS: Dict[int, Tuple[object, int]] = {}   # non-weakrefable fallback
+_mask_counter = itertools.count()
+
+
+def _mask_token(mask) -> int:
+    try:
+        tok = _MASK_TOKENS.get(mask)
+        if tok is None:
+            tok = next(_mask_counter)
+            _MASK_TOKENS[mask] = tok
+        return tok
+    except TypeError:
+        # callable instance without __weakref__ support: pin it for the
+        # process lifetime so its id can never be recycled, and re-check
+        # identity in case a pin-table hit is a different object (cannot
+        # happen while pinned, but cheap to assert)
+        ent = _MASK_PINS.get(id(mask))
+        if ent is None or ent[0] is not mask:
+            ent = (mask, next(_mask_counter))
+            _MASK_PINS[id(mask)] = ent
+        return ent[1]
+
+
 class NotSerializableError(TypeError):
     """A policy carries state that cannot round-trip through JSON — today
     that means a rule with a ``mask`` callable (dynamic truncation
@@ -155,17 +188,23 @@ class TruncationRule:
     quantize_dot_inputs: bool = False         # emulate low-precision MXU inputs
     mask: Optional[MaskFn] = None             # dynamic truncation predicate
 
+    # set per-instance in __post_init__ via object.__setattr__; ClassVar so
+    # the dataclass machinery (fields/eq/hash/asdict) never sees it
+    _rx: ClassVar[Any]
+
     def __post_init__(self):
         object.__setattr__(self, "fmt", parse_format(self.fmt))
         object.__setattr__(self, "_rx", compile_scope(self.scope))
 
     def cache_key(self) -> tuple:
         """Stable hashable identity for trace caches. Mask functions are
-        identified by (__name__, id): two policies sharing the same mask
-        object alias, distinct closures never do."""
+        identified by (__name__, registry token): two policies sharing the
+        same mask object alias, distinct closures never do — and unlike a
+        raw ``id()`` the token is never reused after the mask is collected
+        (see ``_mask_token``)."""
         mask_id = (None if self.mask is None
                    else (getattr(self.mask, "__name__", "<mask>"),
-                         id(self.mask)))
+                         _mask_token(self.mask)))
         return (self.fmt.cache_key, self.scope, self.from_width, self.ops,
                 self.exclude_ops, self.quantize_dot_inputs, mask_id)
 
@@ -231,6 +270,11 @@ class TruncationPolicy:
 
     rules: Tuple[TruncationRule, ...]
     excludes: Tuple[str, ...] = ()
+
+    # set per-instance in __post_init__ via object.__setattr__ (ClassVar:
+    # excluded from fields/eq/hash, see the memo comment below)
+    _ex_rx: ClassVar[Tuple[Any, ...]]
+    _match_memo: ClassVar[Dict[Any, Optional[TruncationRule]]]
 
     def __post_init__(self):
         if isinstance(self.rules, TruncationRule):

@@ -125,6 +125,11 @@ class SearchResult:
                                       # any single dispatch carried —
                                       # identity padding never counted
     n_devices: int = 1                # probe-axis shards (1 = unsharded)
+    # static-analysis pruning (autosearch(static_prune=...)): per-scope
+    # per-rung verdicts ({path: {"m10": "EXACT", ...}}) and the number of
+    # ladder rungs the abstract interpreter decided without a dispatch
+    static_verdicts: Optional[Dict[str, Dict[str, str]]] = None
+    n_pruned: int = 0
 
     @property
     def probes_per_dispatch_per_device(self) -> float:
@@ -190,6 +195,11 @@ class SearchResult:
             "n_devices": int(self.n_devices),
             "history": [[tag, float(v)] for tag, v in self.history],
         }
+        if self.static_verdicts is not None:
+            prov["static_pruned"] = int(self.n_pruned)
+            prov["static_verdicts"] = {
+                path: dict(rungs)
+                for path, rungs in self.static_verdicts.items()}
         use_hints = dict(hints) if hints is not None else self.hints()
         art = PolicyArtifact(name=name, policy=self.policy(),
                              assignments=rows, provenance=prov,
@@ -229,6 +239,7 @@ def autosearch(fn: Callable, args: Sequence = (),
                memflag_threshold: Optional[float] = None,
                impl: str = "auto", refine: bool = True,
                warm_start: Optional[Dict[str, Optional[int]]] = None,
+               static_prune: object = False,
                mesh=None, batch_axis: str = "probe", in_shardings=None,
                verbose: bool = False) -> SearchResult:
     """Search a per-scope mixed-precision assignment for ``fn(*args)``.
@@ -270,6 +281,35 @@ def autosearch(fn: Callable, args: Sequence = (),
     the test suite; a non-monotone ladder can make the guided pick differ
     (it is still a measured-admissible width, never an unvalidated one).
 
+    ``static_prune`` turns on the abstract-interpretation pre-pass
+    (``repro.analysis``): ``True`` calibrates input ranges from the
+    concrete ``args``/``kwargs`` arrays; a sequence supplies one
+    ``analysis.AbsVal`` (or concrete array) per traced input. Ladder rungs
+    the analysis proves ``EXACT`` (solo run bit-identical to the
+    reference; the dynamic probe would measure exactly 0.0) or
+    ``OVERFLOW_CERTAIN`` (a non-finite provably reaches an output; the
+    probe would fail) are decided without a dispatch; ``UNKNOWN`` rungs
+    keep dynamic probing. Budget *accounting* mirrors the unpruned
+    schedule (pruned rungs still consume their budget window), so the
+    returned assignments are bit-identical to ``static_prune=False`` with
+    strictly fewer ``evals_used`` and dispatches whenever anything was
+    decided — assuming a metric that (a) is a deterministic function of
+    the two observable pytrees (an EXACT rung's probe is substituted by
+    the measured ``metric(ref, ref)``, which need not be 0.0: poisson's
+    residual-excess metric grades the reference against its own
+    convergence tolerance) and (b) rejects any candidate with a
+    non-finite output leaf (all built-in metrics and the mini-app
+    ``observable_error`` qualify; ``loss`` only inspects the first leaf,
+    so overflow pruning relies on criticality reaching *some* output —
+    use single-output loss fns with it). With ``warm_start`` hints,
+    verdicts pre-seed the bisection brackets instead (same assignments
+    under ample budget; a tight budget may legitimately assign
+    differently since hint probes are not window-mirrored); the warm
+    path additionally requires ``metric(ref, ref) == 0.0`` exactly —
+    brackets are pre-seeded before any reference exists to measure — and
+    raises otherwise. Verdicts land in ``SearchResult.static_verdicts``
+    and artifact provenance.
+
     ``memflag_threshold`` is accepted for backward compatibility but unused:
     exclusion victims are now chosen by batched trial exclusion (which costs
     the same budget as the old mem-mode ranking pass but reuses the compiled
@@ -309,6 +349,9 @@ def autosearch(fn: Callable, args: Sequence = (),
     scopes = list(scopes)
 
     hints = _frontier_hints(warm_start, scopes)
+    sv = None      # analysis.StaticVerdicts when static_prune is active
+    _V = None      # the Verdict enum, bound alongside sv
+    virtual = 0    # unpruned-schedule budget charges (mirrors `evals`)
 
     def result(assignments, final_err):
         return SearchResult(
@@ -317,7 +360,9 @@ def autosearch(fn: Callable, args: Sequence = (),
             converged=final_err <= threshold, history=history,
             n_compiles=compiles, n_sites=n_sites, n_dispatches=dispatches,
             n_warm_hints=len(hints),
-            probe_batch=K, max_dispatch_rows=max_rows, n_devices=ndev)
+            probe_batch=K, max_dispatch_rows=max_rows, n_devices=ndev,
+            static_verdicts=sv.to_json() if sv is not None else None,
+            n_pruned=sv.n_decided if sv is not None else 0)
 
     cand_widths = [w for w in widths if w < 23]
     n_sites = 0
@@ -357,7 +402,19 @@ def autosearch(fn: Callable, args: Sequence = (),
     k_logical = len(cand_widths) + 1
     K = pad_to_shards(k_logical, mesh, batch_axis)
 
+    if static_prune is not False and static_prune is not None:
+        from repro.analysis import analyze_closed, scope_rung_verdicts
+        from repro.analysis.verdicts import Verdict as _V
+        calib = leaves if static_prune is True else list(static_prune)
+        analysis = analyze_closed(closed, calib)
+        sv = scope_rung_verdicts(analysis, index, [s.path for s in scopes],
+                                 cand_widths, exp_bits)
+        log(f"static analysis: {sv.n_decided} rungs decided, "
+            f"{analysis.n_widened} carries widened, outputs "
+            f"{'finite' if sv.outputs_finite else 'NOT provably finite'}")
+
     ref_host: List[Optional[object]] = [None]  # full-precision outputs (np)
+    self_err: List[Optional[float]] = [None]   # metric(ref, ref), with ref
 
     def eval_candidates(cands: List[Tuple[str, TruncationPolicy]]
                         ) -> List[float]:
@@ -392,6 +449,24 @@ def autosearch(fn: Callable, args: Sequence = (),
             if ref_host[0] is None:
                 ref_host[0] = jax.tree_util.tree_map(lambda a: a[0], host)
                 base = 1
+                if sv is not None:
+                    # static pruning substitutes metric(ref, ref) for
+                    # EXACT-rung probes: an EXACT rung's outputs are
+                    # bit-identical to the reference, so this measured
+                    # value IS what the probe would return. Usually 0.0;
+                    # residual-style metrics (poisson) grade the reference
+                    # against its own convergence tolerance and can return
+                    # more (or NaN on a non-finite reference — either way
+                    # the substitution matches the unpruned measurement).
+                    self_err[0] = metric(ref_host[0], ref_host[0])
+                    if hints and not self_err[0] == 0.0:  # '== ' vs NaN too
+                        raise ValueError(
+                            "static_prune with warm_start requires "
+                            "metric(ref, ref) to be exactly 0.0, got "
+                            f"{self_err[0]!r}: the warm bisection "
+                            "pre-seeds EXACT rungs as passing before the "
+                            "reference exists to measure — rerun with "
+                            "warm_start=None or static_prune=False")
             for j, tag in enumerate(chunk):
                 cand = jax.tree_util.tree_map(
                     lambda a, j=j: a[base + j], host)
@@ -450,6 +525,21 @@ def autosearch(fn: Callable, args: Sequence = (),
         hi = {si.path: nw for si in scopes}   # smallest index known failing
         err_at: Dict[Tuple[str, int], float] = {}
 
+        if sv is not None:
+            # static verdicts pre-tighten the bisection brackets: EXACT
+            # rungs are known passing at exactly 0.0 error (solo run is
+            # bit-identical to the reference; eval_candidates validates
+            # metric(ref, ref) == 0.0 for this path on first dispatch),
+            # OVERFLOW_CERTAIN rungs are known failing — neither probes
+            for si in scopes:
+                for i, w in enumerate(cand_widths):
+                    v = sv.get(si.path, w)
+                    if v == _V.EXACT:
+                        err_at[(si.path, i)] = 0.0
+                        lo[si.path] = max(lo[si.path], i)
+                    elif v == _V.OVERFLOW_CERTAIN:
+                        hi[si.path] = min(hi[si.path], i)
+
         def seed(si) -> int:
             pred = hints.get(si.path, _UNHINTED)
             if pred is _UNHINTED:
@@ -502,6 +592,47 @@ def autosearch(fn: Callable, args: Sequence = (),
                 accept(si, cand_widths[b], err_at[(si.path, b)])
             else:
                 accept(si, widths[0], 0.0)     # nothing admissible: full
+    elif sv is not None:
+        # ---- statically pruned exhaustive ladder ---------------------------
+        # Budget windows mirror the unpruned schedule exactly (`virtual`
+        # charges what the unpruned search would have charged), so each
+        # scope sees the identical probe window and the accepted widths are
+        # bit-identical; only UNKNOWN rungs dispatch. All surviving probes
+        # share one chunked eval_candidates call, so dispatches shrink too.
+        plan: List[Tuple[ScopeInfo, Optional[List[int]], List[int]]] = []
+        for si in scopes:
+            afford = budget - virtual - reserve
+            if afford <= 0:
+                plan.append((si, None, []))   # window exhausted: full prec
+                continue
+            probe = cand_widths[:afford]
+            virtual += len(probe)
+            live = [w for w in probe if sv.get(si.path, w) == _V.UNKNOWN]
+            exact = [w for w in probe if sv.get(si.path, w) == _V.EXACT]
+            plan.append((si, live, exact))
+        flat = [(si, w) for si, live, _ in plan if live for w in live]
+        flat_errs = eval_candidates([
+            (f"ladder:{si.path}:m{w}", policy_of({}, (si.path, w)))
+            for si, w in flat]) if flat else []
+        if ref_host[0] is None and any(exact for _, _, exact in plan):
+            # every probe was statically decided but EXACT substitution
+            # needs the measured metric(ref, ref): materialize the
+            # reference (one dispatch the unpruned search also pays)
+            eval_candidates([])
+        z = self_err[0]
+        pos = 0
+        for si, live, exact in plan:
+            if live is None:
+                assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
+                continue
+            errs = flat_errs[pos:pos + len(live)]
+            pos += len(live)
+            passing = ([(w, e) for w, e in zip(live, errs) if e <= threshold]
+                       + [(w, z) for w in exact if z <= threshold])
+            if passing:
+                accept(si, *min(passing))    # narrowest admissible width
+            else:
+                assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
     else:
         for si in scopes:
             afford = budget - evals - reserve
@@ -521,14 +652,44 @@ def autosearch(fn: Callable, args: Sequence = (),
                 assignments[si.path] = ScopeAssignment(si, widths[0], 0.0)
 
     # ---- phase 2: joint check + greedy-exclusion refinement ----------------
+    if sv is not None and hints:
+        # hint probes are not window-mirrored (the bisection already adapts
+        # its schedule to measurements); phase 2 mirrors from actual spend
+        virtual = evals
+
+    def spent() -> int:
+        """Budget consumed for *control flow*: the unpruned schedule's
+        charge count when static pruning is on (so windows and loop exits
+        match the unpruned search decision-for-decision), actual evals
+        otherwise."""
+        return virtual if sv is not None else evals
+
     if policy_of(assignments).rules:
-        final_err = eval_candidates([("joint", policy_of(assignments))])[0]
+        if sv is not None and all(
+                sv.get(p, a.man_bits) == _V.EXACT
+                for p, a in assignments.items()
+                if a.fmt(exp_bits) is not None):
+            # every truncated scope sits on a statically EXACT rung: by
+            # induction over program order every quantize in the joint
+            # policy is the identity, so the joint run is bit-identical to
+            # the reference and would measure metric(ref, ref) — no
+            # dispatch needed (all-EXACT assignments imply the rungs were
+            # accepted as passing, so the reference is already measured)
+            if ref_host[0] is None:
+                eval_candidates([])
+            final_err = self_err[0]
+            history.append(("joint", final_err))
+            virtual += 1
+        else:
+            final_err = eval_candidates([("joint",
+                                          policy_of(assignments))])[0]
+            virtual += 1
     else:
         final_err = 0.0  # nothing truncated -> trivially exact, no eval owed
         history.append(("joint", 0.0))
     log(f"joint policy err {final_err:.3e}")
 
-    while refine and final_err > threshold and evals < budget:
+    while refine and final_err > threshold and spent() < budget:
         live = [p for p, a in assignments.items()
                 if not a.excluded and a.fmt(exp_bits) is not None]
         if not live:
@@ -536,14 +697,42 @@ def autosearch(fn: Callable, args: Sequence = (),
         # most fragile first: the scope whose solo error was worst is the
         # likeliest culprit, so it is tried even under a clipped budget
         live.sort(key=lambda p: -assignments[p].error_at_accept)
-        live = live[:budget - evals]
-        errs = eval_candidates([
-            (f"exclude?:{p}", policy_of(assignments, minus=p)) for p in live])
+        live = live[:budget - spent()]
+        if sv is not None:
+            virtual += len(live)
+            # a scope whose assigned format is *universally* exact (grid
+            # covers its sites' entire carrier dtype, not just the
+            # reference values) quantizes nothing even inside a perturbed
+            # joint policy: minus-that-scope is bit-identical to the
+            # current joint, so its trial-exclusion error IS final_err
+            measured = [p for p in live
+                        if not sv.is_universal(p, assignments[p].man_bits)]
+            m_errs = eval_candidates([
+                (f"exclude?:{p}", policy_of(assignments, minus=p))
+                for p in measured]) if measured else []
+            by_scope = dict(zip(measured, m_errs))
+            errs = []
+            for p in live:
+                if p in by_scope:
+                    errs.append(by_scope[p])
+                else:
+                    errs.append(final_err)
+                    history.append((f"exclude?:{p}", final_err))
+        else:
+            errs = eval_candidates([
+                (f"exclude?:{p}", policy_of(assignments, minus=p))
+                for p in live])
         best = int(np.argmin(errs))
         victim = live[best]
         assignments[victim].excluded = True
         final_err = errs[best]
         history.append((f"exclude:{victim}", final_err))
         log(f"exclude {victim} (paper §6.3) -> err {final_err:.3e}")
+
+    if sv is not None and ref_host[0] is None:
+        # degenerate all-static search (every rung decided, joint skipped,
+        # every exclusion substituted): materialize the reference anyway so
+        # the metric contract above is still validated before reporting
+        eval_candidates([])
 
     return result(assignments, final_err)

@@ -1,0 +1,343 @@
+"""Static numerical analysis (``repro.analysis``): abstract-domain
+soundness, per-rung verdicts, and the autosearch static-pruning
+acceptance — pruned searches must return bit-identical assignments with
+strictly fewer evals AND dispatches.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (
+    AbsVal, Verdict, analyze_closed, from_concrete, join, leq,
+    scope_rung_verdicts, top_for_dtype, universally_exact,
+)
+from repro.analysis.verdicts import rne_overflow_boundary
+from repro.core import interpreter
+from repro.core.formats import BF16, FP16, FPFormat
+from repro.core.policy import TruncationPolicy, TruncationRule
+
+_EVERYWHERE = TruncationPolicy(rules=(
+    TruncationRule(fmt=FPFormat(8, 0), scope="**"),))
+
+
+# --------------------------------------------------------------------------
+# abstract domain
+# --------------------------------------------------------------------------
+
+
+def test_from_concrete_exact_facts():
+    v = from_concrete(np.float32([0.5, 2.0, -1.5]))
+    assert v.hi == 2.0 and v.lo == 2.0           # max |x| known exactly
+    assert v.min_nz == 0.5
+    assert v.ulp_exp == -1                       # all multiples of 2^-1
+    assert v.rel_bits == 1                       # 1.5 needs one mantissa bit
+    assert v.finite and not v.nonneg
+
+    nn = from_concrete(np.float32([0.0, 4.0]))
+    assert nn.nonneg and nn.ulp_exp >= 2 and nn.rel_bits == 0
+
+
+def test_from_concrete_nonfinite_falls_to_top():
+    v = from_concrete(np.float32([1.0, np.nan]))
+    assert not v.finite
+    top = top_for_dtype(np.float32)
+    assert leq(v, top) or v.hi == np.inf
+
+
+def test_join_is_lattice_upper_bound():
+    a = from_concrete(np.float32([0.5]))
+    b = from_concrete(np.float32([-8.0, 3.0]))
+    j = join(a, b)
+    assert leq(a, j) and leq(b, j)
+    assert leq(a, join(a, a)) and leq(join(a, a), a)   # idempotent
+
+
+def test_universal_exactness_matches_carrier_grids():
+    # e8m>=7 covers the whole bfloat16 grid; e8m<7 cannot
+    for m in (7, 10, 15, 23):
+        assert universally_exact(FPFormat(8, m), jnp.bfloat16)
+    for m in (2, 3, 5):
+        assert not universally_exact(FPFormat(8, m), jnp.bfloat16)
+    # fp16 needs both the mantissa AND the subnormal reach: e8m10 keeps the
+    # mantissa but its grid still covers fp16's subnormals via its own
+    # wider exponent range; e5m10 is fp16 itself
+    assert universally_exact(FPFormat(5, 10), jnp.float16)
+    assert not universally_exact(FPFormat(8, 7), jnp.float16)
+    # float32 is only covered from m23 up
+    assert universally_exact(FPFormat(8, 23), jnp.float32)
+    assert not universally_exact(FPFormat(8, 15), jnp.float32)
+
+
+def _abs_check(v: AbsVal, arr: np.ndarray):
+    """Concrete array is contained in the abstract value."""
+    a = np.abs(np.asarray(arr, np.float64))
+    if not np.all(np.isfinite(a)):
+        assert v.hi == np.inf
+        return
+    amax = float(a.max()) if a.size else 0.0
+    assert amax <= v.hi * (1 + 1e-9) + 1e-300, (amax, v.hi)
+    assert v.lo <= amax * (1 + 1e-9) + 1e-300, (v.lo, amax)
+    nz = a[a != 0]
+    if nz.size:
+        assert v.min_nz <= float(nz.min()) * (1 + 1e-9), (v.min_nz, nz.min())
+    if np.isfinite(v.ulp_exp) and v.ulp_exp > -1000:
+        q = np.asarray(arr, np.float64) / 2.0 ** v.ulp_exp
+        assert np.allclose(q, np.round(q), rtol=0, atol=0), v.ulp_exp
+
+
+@pytest.mark.parametrize("fn,args", [
+    (lambda x: jnp.exp(-x * x) + 1.0, (np.float32([0.5, -2.0, 3.0]),)),
+    (lambda x: jnp.sum(x ** 2) / np.float32(4.0), (np.float32([1.0, 2.0]),)),
+    (lambda x, w: jnp.tanh(x @ w),
+     (np.float32(np.arange(6).reshape(2, 3)) / 8,
+      np.float32(np.ones((3, 2))) * 0.25)),
+    (lambda x: jax.lax.scan(lambda c, t: (c * 0.5 + t, c), 0.0 * x[0], x)[1],
+     (np.float32([1.0, 0.5, 0.25, 2.0]),)),
+])
+def test_outputs_sound_vs_concrete_eval(fn, args):
+    """Every concrete program output lies inside its abstract envelope."""
+    closed = jax.make_jaxpr(fn)(*args)
+    res = analyze_closed(closed, list(args))
+    concrete = fn(*args)
+    leaves = jax.tree_util.tree_leaves(concrete)
+    assert len(leaves) == len(res.out_vals)
+    for v, out in zip(res.out_vals, leaves):
+        _abs_check(v, np.asarray(out))
+
+
+def test_scan_carry_fixpoint_terminates_and_widens():
+    # a strictly growing carry cannot stabilize: the fixpoint must widen
+    # (to the carrier top) instead of looping, and stay sound
+    def f(x):
+        def body(c, t):
+            return c * 2.0 + t, c
+        return jax.lax.scan(body, x[0], x)
+
+    x = np.float32([1.0, 1.0, 1.0, 1.0])
+    closed = jax.make_jaxpr(f)(x)
+    res = analyze_closed(closed, [x])
+    assert res.n_widened >= 1
+    carry, ys = f(x)
+    _abs_check(res.out_vals[0], np.asarray(carry))
+
+
+# --------------------------------------------------------------------------
+# per-rung verdicts
+# --------------------------------------------------------------------------
+
+
+def _sod_closed_bf16():
+    from repro.apps import get_app
+    app = get_app("sod")
+    state = app.init_state(jnp.bfloat16)
+    closed = jax.make_jaxpr(app.run_observables)(state)
+    leaves = jax.tree_util.tree_leaves(((state,), {}))
+    return app, state, closed, leaves
+
+
+def test_sod_bf16_rung_verdicts():
+    """bf16-carrier state: every e8m>=7 rung is statically EXACT (and
+    universally so), narrower rungs stay dynamic."""
+    from repro.search.scopes import discover_scopes
+    app, state, closed, leaves = _sod_closed_bf16()
+    res = analyze_closed(closed, leaves)
+    paths = [s.path for s in discover_scopes(closed)]
+    assert paths
+    index = interpreter.enumerate_sites(closed, _EVERYWHERE)
+    sv = scope_rung_verdicts(res, index, paths, [15, 10, 7, 5, 3, 2], 8)
+    for p in paths:
+        for w in (15, 10, 7):
+            assert sv.get(p, w) == Verdict.EXACT
+            assert sv.is_universal(p, w)
+        for w in (5, 3, 2):
+            assert sv.get(p, w) == Verdict.UNKNOWN
+            assert not sv.is_universal(p, w)
+    assert sv.n_decided == 3 * len(paths)
+    js = sv.to_json()
+    assert js[paths[0]]["m7"] == "EXACT"
+
+
+def test_synthetic_overflow_splits_ladder():
+    """A value provably at 3.3e38 overflows e8m2/e8m3 (RNE boundaries
+    3.19e38 / 3.296e38) but not e8m5 (3.378e38) — and the verdict requires
+    the inf to provably reach an output."""
+    big = np.float32(3.3e38)
+    assert rne_overflow_boundary(FPFormat(8, 2)) < float(big)
+    assert rne_overflow_boundary(FPFormat(8, 3)) < float(big)
+    assert rne_overflow_boundary(FPFormat(8, 5)) > float(big)
+
+    def f(x):
+        return x * big
+
+    x = np.float32([1.0, -1.0])
+    closed = jax.make_jaxpr(f)(x)
+    res = analyze_closed(closed, [x])
+    index = interpreter.enumerate_sites(closed, _EVERYWHERE)
+    sv = scope_rung_verdicts(res, index, ["**"], [5, 3, 2], 8)
+    assert sv.get("**", 2) == Verdict.OVERFLOW_CERTAIN
+    assert sv.get("**", 3) == Verdict.OVERFLOW_CERTAIN
+    assert sv.get("**", 5) == Verdict.UNKNOWN
+
+
+def test_overflow_needs_criticality():
+    """The same overflowing site feeding only a bounded output (tanh) is
+    not certain to surface: the verdict must stay UNKNOWN."""
+    big = np.float32(3.3e38)
+
+    def f(x):
+        return jnp.tanh(x * big)
+
+    x = np.float32([1.0])
+    closed = jax.make_jaxpr(f)(x)
+    res = analyze_closed(closed, [x])
+    index = interpreter.enumerate_sites(closed, _EVERYWHERE)
+    sv = scope_rung_verdicts(res, index, ["**"], [2], 8)
+    assert sv.get("**", 2) == Verdict.UNKNOWN
+
+
+# --------------------------------------------------------------------------
+# autosearch static pruning: bit-identical, strictly cheaper
+# --------------------------------------------------------------------------
+
+
+def _table(result):
+    return {p: (a.man_bits, a.excluded)
+            for p, a in result.assignments.items()}
+
+
+def test_autosearch_static_prune_sod_bf16():
+    """Tier-1 acceptance: on the bf16 Sod tube, static_prune=True returns
+    bit-identical assignments with strictly fewer evals AND dispatches,
+    and records the verdicts in artifact provenance."""
+    from repro.apps import get_app
+    from repro.search import driver
+
+    app = get_app("sod")
+    state = app.init_state(jnp.bfloat16)
+
+    def run(**kw):
+        return driver.autosearch(
+            app.run_observables, (state,), app.error_metric, 64,
+            threshold=app.search_threshold, **kw)
+
+    base = run()
+    pruned = run(static_prune=True)
+    assert _table(pruned) == _table(base)
+    assert pruned.final_error == base.final_error
+    assert pruned.evals_used < base.evals_used
+    assert pruned.n_dispatches < base.n_dispatches
+    assert pruned.n_pruned > 0
+    assert base.static_verdicts is None and pruned.static_verdicts
+
+    art = pruned.to_artifact("sod_static")
+    assert art.provenance["static_pruned"] == pruned.n_pruned
+    assert art.provenance["static_verdicts"] == pruned.static_verdicts
+    base_art = base.to_artifact("sod_dynamic")
+    assert "static_verdicts" not in base_art.provenance
+
+    # warm-started searches prune too, and stay bit-identical
+    warm_base = run(warm_start=base.hints())
+    warm_pruned = run(warm_start=base.hints(), static_prune=True)
+    assert _table(warm_pruned) == _table(warm_base)
+    assert warm_pruned.evals_used < warm_base.evals_used
+    assert warm_pruned.n_dispatches < warm_base.n_dispatches
+
+
+def test_static_prune_explicit_calibration():
+    """static_prune accepts explicit per-invar ranges (AbsVals or arrays)
+    instead of calibrating from the call's own arguments."""
+    from repro.apps import get_app
+    from repro.search import driver
+
+    app = get_app("sod")
+    state = app.init_state(jnp.bfloat16)
+    leaves = jax.tree_util.tree_leaves(((state,), {}))
+    calib = [from_concrete(x) for x in leaves]
+    base = driver.autosearch(app.run_observables, (state,),
+                             app.error_metric, 64,
+                             threshold=app.search_threshold)
+    pruned = driver.autosearch(app.run_observables, (state,),
+                               app.error_metric, 64,
+                               threshold=app.search_threshold,
+                               static_prune=calib)
+    assert _table(pruned) == _table(base)
+    assert pruned.evals_used < base.evals_used
+
+
+# --------------------------------------------------------------------------
+# fixpoint termination across the arch-config zoo
+# --------------------------------------------------------------------------
+
+from repro.configs.base import ARCH_IDS, get_config  # noqa: E402
+
+_FAST_ARCHS = {"h2o-danube-1.8b", "olmoe-1b-7b"}
+_ARCH_PARAMS = [
+    a if a in _FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCH_IDS
+]
+
+
+@pytest.mark.parametrize("arch_id", _ARCH_PARAMS)
+def test_analysis_terminates_on_arch_configs(arch_id):
+    """The widening fixpoint must terminate on every architecture's traced
+    loss (scan carries, while loops, conds included), from dtype tops."""
+    from repro.models import Model
+    from tests.test_arch_smoke import make_batch
+
+    cfg = get_config(arch_id, "smoke")
+    model = Model(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, rng)
+    closed = jax.make_jaxpr(model.loss)(params, batch)
+    res = analyze_closed(closed)          # no inputs: dtype tops
+    assert len(res.records) > 0
+    assert len(res.out_vals) == len(closed.jaxpr.outvars)
+
+
+# --------------------------------------------------------------------------
+# @slow acceptance: bench model + remaining PDE apps
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_autosearch_static_prune_bench_model_bf16():
+    from benchmarks.common import bench_batch, bench_model
+    from repro import search
+
+    cfg, model, params = bench_model(dtype="bfloat16")
+    batch = bench_batch(cfg)
+
+    def run(**kw):
+        return search.autosearch(model.loss, (params, batch),
+                                 search.loss_degradation, 128,
+                                 threshold=5e-3, **kw)
+
+    base = run()
+    pruned = run(static_prune=True)
+    assert _table(pruned) == _table(base)
+    assert pruned.evals_used < base.evals_used
+    assert pruned.n_dispatches < base.n_dispatches
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("app_name", ["heat", "poisson"])
+def test_autosearch_static_prune_pde_apps_bf16(app_name):
+    from repro.apps import get_app
+    from repro.search import driver
+
+    app = get_app(app_name)
+    state = app.init_state(jnp.bfloat16)
+
+    def run(**kw):
+        return driver.autosearch(
+            app.run_observables, (state,), app.error_metric, 64,
+            threshold=app.search_threshold, **kw)
+
+    base = run()
+    pruned = run(static_prune=True)
+    assert _table(pruned) == _table(base)
+    assert pruned.evals_used < base.evals_used
+    assert pruned.n_dispatches < base.n_dispatches

@@ -15,12 +15,16 @@ from repro.core.policy import TruncationPolicy
 @pytest.fixture(autouse=True)
 def _no_autosearch(monkeypatch):
     """The gate must validate the committed artifact BEFORE searching;
-    any fresh_artifact call in these tests is a bug."""
+    any fresh_artifact call in these tests is a bug. The model's scope
+    frontier (for the pre-search artifact lint) is pinned so these tests
+    never trace the real bench model either."""
     def boom():
         raise AssertionError(
             "fresh_artifact ran before the committed artifact was "
             "validated — --check must fail fast")
     monkeypatch.setattr(policy_drift, "fresh_artifact", boom)
+    monkeypatch.setattr(policy_drift, "_model_scope_paths",
+                        lambda: ["layer0/mlp"])
 
 
 def test_check_missing_artifact_names_refresh_command(tmp_path, capsys):

@@ -196,3 +196,52 @@ def test_backward_stacks_normalize_into_scope():
     assert wrapped, "expected autodiff-decorated name stacks in grad jaxpr"
     assert any(normalize_stack(ns).startswith("cell") for ns in wrapped)
     assert all("(" not in normalize_stack(ns) for ns in decorated)
+
+
+# --------------------------------------------------------------------------
+# mask cache-key identity: tokens, not raw id()s
+# --------------------------------------------------------------------------
+
+
+def test_mask_cache_key_stable_and_distinct():
+    from repro.core.policy import TruncationRule, magnitude_below
+
+    m = magnitude_below(0.5)
+    r1 = TruncationRule(fmt="bf16", mask=m)
+    r2 = TruncationRule(fmt="bf16", mask=m)
+    # same mask object -> same key (policies sharing a mask alias), and the
+    # key is stable across repeated computation
+    assert r1.cache_key() == r2.cache_key() == r1.cache_key()
+    # a distinct closure with the same __name__ must NOT alias
+    m2 = magnitude_below(0.5)
+    assert TruncationRule(fmt="bf16", mask=m2).cache_key() != r1.cache_key()
+
+
+def test_mask_cache_key_survives_id_reuse():
+    """A cache key computed from a now-dead mask must never collide with a
+    later mask that CPython happens to allocate at the same address —
+    otherwise a trace cache keyed on the old policy serves its executable
+    (the OLD predicate) for the new one."""
+    from repro.core.policy import TruncationRule, magnitude_below
+
+    # freeing the mask and immediately re-allocating an identical closure
+    # lands on the recycled address essentially always under pymalloc's
+    # LIFO free lists; retry a few times in case something intervenes
+    reborn = key1 = None
+    for _ in range(50):
+        mask = magnitude_below(0.5)
+        key1 = TruncationRule(fmt="bf16", mask=mask).cache_key()
+        dead = id(mask)
+        del mask
+        for _ in range(100):
+            cand = magnitude_below(0.5)   # same __name__ as the dead mask
+            if id(cand) == dead:
+                reborn = cand
+                break
+            del cand
+        if reborn is not None:
+            break
+    if reborn is None:
+        pytest.skip("allocator never reused the dead mask's address")
+    key2 = TruncationRule(fmt="bf16", mask=reborn).cache_key()
+    assert key1 != key2, "recycled id() aliased two distinct masks"
